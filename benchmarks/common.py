@@ -1,0 +1,113 @@
+"""Shared benchmark harness: run BFS/SSSP/PR over the Table-3-like datasets
+in baseline and IRU modes, collecting irregular-access traces for the GPU
+cost model.  Results are cached under results/bench/ so figure scripts
+compose without re-simulating."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import coalescing
+from repro.apps.bfs import bfs
+from repro.apps.pagerank import pagerank
+from repro.apps.sssp import sssp
+from repro.apps.trace import TraceRecorder
+from repro.core import IRUConfig
+from repro.core.costmodel import Comparison, GPUConfig, TrafficCounts, cycles, energy_pj, simulate_trace
+from repro.graphs.generators import make_dataset
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+# Table-3-like datasets at container scale (same connectivity regimes).
+DATASET_KW = {
+    "ca": dict(scale=96),
+    "cond": dict(n=12_000),
+    "delaunay": dict(scale=96),
+    "human": dict(n=3_000),
+    "kron": dict(scale=13),
+    "msdoor": dict(scale=20),
+}
+ALGOS = ("bfs", "sssp", "pr")
+
+# The IRU hash geometry of the paper: 1024 sets x 32 slots (4 partitions).
+# window_elems models the streaming lookahead: the hash drains under warp
+# pressure, so the reorder scope is the in-flight window, not the frontier
+# (~8 prefetches x 32 elems x 4 partitions of pipelining headroom + occupancy
+# => ~8k elements in flight).
+IRU_HASH = dict(num_sets=1024, slots=32, window_elems=8192)
+
+
+def _run(algo: str, g, mode: str, recorder):
+    cfgs = {
+        "bfs": IRUConfig(mode="hash_ref", **IRU_HASH),
+        "sssp": IRUConfig(mode="hash_ref", filter_op="min", **IRU_HASH),
+        "pr": IRUConfig(mode="hash_ref", filter_op="add", **IRU_HASH),
+    }
+    if algo == "bfs":
+        bfs(g, 0, mode=mode, iru_config=cfgs["bfs"], recorder=recorder)
+    elif algo == "sssp":
+        sssp(g, 0, mode=mode, iru_config=cfgs["sssp"], recorder=recorder)
+    else:
+        pagerank(g, iters=5, mode=mode, iru_config=cfgs["pr"], recorder=recorder)
+
+
+def run_pair(algo: str, dataset: str, *, force: bool = False) -> dict:
+    """Baseline + IRU traffic counts for one (algo, dataset) cell (cached)."""
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, f"{algo}__{dataset}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            out = json.load(f)
+        # reports derive from counts at CURRENT GPUConfig constants
+        base = TrafficCounts(**out["baseline"])
+        iru = TrafficCounts(**out["iru"])
+        out["report"] = Comparison(f"{algo}/{dataset}", base, iru).report()
+        return out
+    g = make_dataset(dataset, **DATASET_KW[dataset])
+    out = {"algo": algo, "dataset": dataset,
+           "n_nodes": g.n_nodes, "n_edges": g.n_edges}
+    for mode in ("baseline", "iru"):
+        rec = TraceRecorder()
+        t0 = time.monotonic()
+        _run(algo, g, mode, rec)
+        out[f"{mode}_wall_s"] = round(time.monotonic() - t0, 2)
+        counts = simulate_trace(rec.events, iru_processed=rec.iru_elements)
+        out[mode] = counts.__dict__
+        # coalescing metric (Fig. 14): distinct 128B blocks per 32-lane warp
+        tot_req, tot_warps = 0, 0
+        for idx, act, _ in rec.events:
+            if len(idx) == 0:
+                continue
+            per = np.asarray(coalescing.accesses_per_group(
+                jnp.asarray(np.asarray(idx, np.int32)),
+                None if act is None else jnp.asarray(act)))
+            tot_req += int(per.sum())
+            tot_warps += int((per > 0).sum())
+        out[f"{mode}_accesses_per_warp"] = tot_req / max(tot_warps, 1)
+        # filter effectiveness (Fig. 15)
+        if mode == "iru":
+            total = sum(len(i) for i, _, _ in rec.events)
+            active = sum(int(np.count_nonzero(a)) if a is not None else len(i)
+                         for i, a, _ in rec.events)
+            out["filtered_frac"] = 1.0 - active / max(total, 1)
+    base = TrafficCounts(**out["baseline"])
+    iru = TrafficCounts(**out["iru"])
+    out["report"] = Comparison(f"{algo}/{dataset}", base, iru).report()
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+def all_cells(force: bool = False):
+    for algo in ALGOS:
+        for ds in DATASET_KW:
+            yield run_pair(algo, ds, force=force)
+
+
+def geomean(xs) -> float:
+    xs = [x for x in xs if x > 0]
+    return float(np.exp(np.mean(np.log(xs)))) if xs else float("nan")

@@ -1,0 +1,36 @@
+"""Figure 13: speedup + energy, IRU vs baseline (paper: 1.33x, -13%;
+per-algo speedups BFS 1.16x / SSSP 1.14x / PR 1.40x)."""
+from __future__ import annotations
+
+from benchmarks.common import ALGOS, all_cells, geomean
+
+
+def run(force: bool = False):
+    rows = []
+    for cell in all_cells(force):
+        r = cell["report"]
+        rows.append({
+            "algo": cell["algo"], "dataset": cell["dataset"],
+            "speedup": round(r["speedup"], 3),
+            "energy_ratio": round(r["energy_ratio"], 3),
+        })
+    for algo in ALGOS:
+        sub = [r for r in rows if r["algo"] == algo]
+        rows.append({"algo": f"MEAN-{algo}", "dataset": "-",
+                     "speedup": round(geomean([r["speedup"] for r in sub]), 3),
+                     "energy_ratio": round(geomean([r["energy_ratio"] for r in sub]), 3)})
+    base = [r for r in rows if not r["algo"].startswith("MEAN")]
+    rows.append({"algo": "MEAN", "dataset": "-",
+                 "speedup": round(geomean([r["speedup"] for r in base]), 3),
+                 "energy_ratio": round(geomean([r["energy_ratio"] for r in base]), 3)})
+    return rows
+
+
+def main():
+    print("algo,dataset,speedup,energy_ratio")
+    for r in run():
+        print(f"{r['algo']},{r['dataset']},{r['speedup']},{r['energy_ratio']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Figure 14: memory requests per warp instruction (paper: ~4 baseline ->
+~3 with IRU; 1.32x coalescing improvement)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import all_cells, geomean
+
+
+def run(force: bool = False):
+    rows = []
+    for cell in all_cells(force):
+        b = cell["baseline_accesses_per_warp"]
+        i = cell["iru_accesses_per_warp"]
+        rows.append({
+            "algo": cell["algo"], "dataset": cell["dataset"],
+            "baseline_acc_per_warp": round(b, 3),
+            "iru_acc_per_warp": round(i, 3),
+            "improvement": round(b / max(i, 1e-9), 3),
+        })
+    rows.append({
+        "algo": "MEAN", "dataset": "-",
+        "baseline_acc_per_warp": round(float(np.mean([r["baseline_acc_per_warp"] for r in rows])), 3),
+        "iru_acc_per_warp": round(float(np.mean([r["iru_acc_per_warp"] for r in rows])), 3),
+        "improvement": round(geomean([r["improvement"] for r in rows]), 3),
+    })
+    return rows
+
+
+def main():
+    print("algo,dataset,baseline_acc_per_warp,iru_acc_per_warp,improvement")
+    for r in run():
+        print(f"{r['algo']},{r['dataset']},{r['baseline_acc_per_warp']},"
+              f"{r['iru_acc_per_warp']},{r['improvement']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Figure 15: fraction of elements filtered/merged by the IRU
+(paper average: 48.5% over SSSP + PR)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import DATASET_KW, geomean, run_pair
+
+
+def run(force: bool = False):
+    rows = []
+    for algo in ("sssp", "pr"):        # filtering applies to SSSP + PR (§6.2)
+        for ds in DATASET_KW:
+            cell = run_pair(algo, ds, force=force)
+            rows.append({"algo": algo, "dataset": ds,
+                         "filtered_frac": round(cell.get("filtered_frac", 0.0), 3)})
+    rows.append({"algo": "MEAN", "dataset": "-",
+                 "filtered_frac": round(float(np.mean([r["filtered_frac"] for r in rows])), 3)})
+    return rows
+
+
+def main():
+    print("algo,dataset,filtered_frac")
+    for r in run():
+        print(f"{r['algo']},{r['dataset']},{r['filtered_frac']}")
+
+
+if __name__ == "__main__":
+    main()

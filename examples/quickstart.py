@@ -1,0 +1,63 @@
+"""Quickstart: the IRU in five minutes.
+
+Shows the paper's three instrumentation patterns (Figs. 8-10) through the
+public API, and the coalescing win they deliver.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (
+    IRUConfig,
+    coalescing_improvement,
+    iru_reorder,
+    iru_scatter_add,
+    iru_scatter_min,
+    load_iru_gather,
+    mean_accesses_per_group,
+)
+
+rng = np.random.default_rng(0)
+
+# An irregular index stream: the edge frontier of a graph exploration —
+# duplicate-heavy, no block locality (the paper's Fig. 2 pattern).
+frontier = jnp.asarray(rng.integers(0, 16384, 8192), jnp.int32)
+node_data = jnp.asarray(rng.standard_normal((16384, 8)), jnp.float32)
+
+print("== BFS pattern (Fig. 8): reorder, then gather ==")
+base_acc = float(mean_accesses_per_group(frontier))
+rows, stream = load_iru_gather(node_data, frontier)
+iru_acc = float(mean_accesses_per_group(stream.indices))
+print(f"accesses/warp: baseline {base_acc:.2f} -> IRU {iru_acc:.2f} "
+      f"({float(coalescing_improvement(frontier, stream.indices)):.2f}x coalescing)")
+# the reply preserves identity: positions undo the reorder
+assert bool(jnp.all(frontier[stream.positions] == stream.indices))
+
+print("\n== SSSP pattern (Fig. 9): merged atomicMin ==")
+dist = jnp.full((16384,), jnp.inf, jnp.float32)
+cand = jnp.asarray(rng.random(8192), jnp.float32)
+dist2 = iru_scatter_min(dist, frontier, cand)
+expect = np.full(16384, np.inf, np.float32)
+np.minimum.at(expect, np.asarray(frontier), np.asarray(cand))
+assert np.allclose(np.asarray(dist2), expect)
+print("merged scatter-min == per-element atomicMin  [ok]")
+
+print("\n== PageRank pattern (Fig. 10): merged atomicAdd ==")
+contrib = jnp.asarray(rng.random(8192), jnp.float32)
+acc = iru_scatter_add(jnp.zeros((16384,), jnp.float32), frontier, contrib)
+expect = np.zeros(16384, np.float32)
+np.add.at(expect, np.asarray(frontier), np.asarray(contrib))
+assert np.allclose(np.asarray(acc), expect, rtol=1e-4, atol=1e-6)
+print("merged scatter-add == per-element atomicAdd  [ok]")
+
+print("\n== Paper-faithful bounded hash engine (O(n), §3.3) ==")
+stream_h = iru_reorder(frontier, config=IRUConfig(mode="hash", num_sets=1024, slots=32))
+print(f"hash-engine accesses/warp: {float(mean_accesses_per_group(stream_h.indices, stream_h.active)):.2f} "
+      f"(sort engine: {iru_acc:.2f} — the hash trades coalescing for O(n) hardware)")
+
+print("\n== Filter/merge effectiveness on a duplicate-heavy stream ==")
+stream_f = iru_reorder(frontier, jnp.ones((8192,), jnp.float32),
+                       config=IRUConfig(filter_op="add"))
+frac = 1.0 - float(stream_f.active.sum()) / 8192
+print(f"filtered/merged: {frac*100:.1f}% of elements (paper avg: 48.5%)")

@@ -1,0 +1,14 @@
+"""Serve a small model with batched requests through the continuous-batching
+engine (deliverable (b), serving flavor).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import subprocess
+import sys
+import os
+
+args = sys.argv[1:] or ["--requests", "16", "--slots", "4", "--max-new", "12"]
+cmd = [sys.executable, "-m", "repro.launch.serve", "--arch", "qwen3-32b",
+       "--smoke"] + args
+env = dict(os.environ, PYTHONPATH="src")
+raise SystemExit(subprocess.run(cmd, env=env, cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__)))).returncode)

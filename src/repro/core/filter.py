@@ -1,0 +1,99 @@
+"""Duplicate filtering / merging — the IRU's comparator+adder datapath.
+
+On the GPU, the IRU merges an incoming element with a hash-resident element
+holding the same index, using either ``fp-add`` (PageRank contributions) or
+``int-min`` (SSSP relaxations), and disables the merged-out thread.  On TPU
+the binned/sorted stream makes duplicates adjacent, so the merge is a segment
+reduction: one surviving lane per unique index carries the merged secondary
+value, all other duplicates are deactivated.
+
+These are the XLA-native reference semantics; kernels/segment_merge holds the
+Pallas kernel with identical behaviour.
+"""
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+FilterOp = Literal["add", "min", "max"]
+
+_INIT = {
+    "add": 0.0,
+    "min": float("inf"),
+    "max": float("-inf"),
+}
+
+
+def run_starts(sorted_indices: jax.Array, active: jax.Array | None = None) -> jax.Array:
+    """Boolean mask marking the first occurrence of each run of equal indices."""
+    prev = jnp.concatenate([sorted_indices[:1] - 1, sorted_indices[:-1]])
+    first = sorted_indices != prev
+    if active is not None:
+        # inactive lanes never start a run; a run can start after inactive tail
+        first = first & active
+    return first
+
+
+def segment_ids(sorted_indices: jax.Array, active: jax.Array | None = None) -> jax.Array:
+    return jnp.cumsum(run_starts(sorted_indices, active).astype(jnp.int32)) - 1
+
+
+def merge_sorted(
+    sorted_indices: jax.Array,
+    values: jax.Array,
+    op: FilterOp = "add",
+    active: jax.Array | None = None,
+):
+    """Merge duplicate adjacent indices.
+
+    Returns ``(merged_values, survivor_mask)`` where ``merged_values[i]`` is
+    the segment reduction of ``values`` over the run containing lane ``i``
+    (meaningful on survivor lanes), and ``survivor_mask`` marks exactly one
+    lane per unique index (the first of each run).  Matches the paper's
+    ``load_iru`` contract: merged-out lanes return ``False``.
+    """
+    n = sorted_indices.shape[0]
+    first = run_starts(sorted_indices, active)
+    segs = jnp.cumsum(first.astype(jnp.int32)) - 1
+    vals = values
+    if active is not None:
+        vals = jnp.where(active, values, jnp.asarray(_INIT[op], values.dtype))
+    if op == "add":
+        merged = jax.ops.segment_sum(vals, segs, num_segments=n)
+    elif op == "min":
+        merged = jax.ops.segment_min(vals, segs, num_segments=n)
+    elif op == "max":
+        merged = jax.ops.segment_max(vals, segs, num_segments=n)
+    else:  # pragma: no cover - guarded by typing
+        raise ValueError(f"unknown filter op {op!r}")
+    out = merged[segs]
+    if active is not None:
+        out = jnp.where(active, out, values)
+    return out, first
+
+
+def filter_rate(survivor_mask: jax.Array, active: jax.Array | None = None) -> jax.Array:
+    """Fraction of elements filtered out (paper Figure 15; avg 48.5%)."""
+    if active is None:
+        total = survivor_mask.shape[0]
+        kept = jnp.sum(survivor_mask)
+        return 1.0 - kept / total
+    total = jnp.maximum(jnp.sum(active), 1)
+    kept = jnp.sum(survivor_mask & active)
+    return 1.0 - kept.astype(jnp.float32) / total.astype(jnp.float32)
+
+
+def compact(actives: jax.Array, *arrays: jax.Array):
+    """Stable-compact surviving lanes to the front (the IRU "groups disabled
+    threads in warps" behaviour — whole trailing groups become inactive).
+
+    Returns ``(new_active, *compacted_arrays)``; trailing slots hold the
+    original inactive payloads in stable order.
+    """
+    n = actives.shape[0]
+    # stable key: survivors first, original order preserved within each class
+    order = jnp.argsort(jnp.where(actives, 0, 1), stable=True)
+    new_active = actives[order]
+    return (new_active,) + tuple(a[order] for a in arrays)

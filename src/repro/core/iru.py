@@ -1,0 +1,221 @@
+"""Irregular-accesses Reorder Unit — functional TPU realization.
+
+The paper's host/device API::
+
+    configure_iru(target_array, dtype_size, indices, secondary, n, filter_op)
+    __device__ bool load_iru(&index, &secondary, &position)
+
+becomes one pure transform::
+
+    stream = iru_reorder(indices, secondary, config=IRUConfig(...))
+
+where ``stream.indices`` is the reordered index vector, ``stream.secondary``
+the co-reordered (and possibly merged) payload, ``stream.positions`` the
+original position of each element (the paper's ``pos`` return), and
+``stream.active`` the per-lane boolean of ``load_iru`` (False for lanes whose
+element was merged/filtered out).  Consumers perform the irregular access with
+``stream.indices`` in the new order — exactly the contract of Figures 8-10.
+
+Two reorder engines:
+
+* ``mode="sort"`` — stable sort by index (so equal indices are adjacent and
+  block grouping is perfect).  O(n log n), XLA-native, the
+  "infinite-patience" upper bound on coalescing.  This is the engine model
+  code (MoE dispatch, embedding) uses.
+* ``mode="hash"`` — the paper-faithful bounded single pass: a direct-mapped
+  hash of ``num_sets`` sets × ``slots`` slots keyed on the memory-block id,
+  conflict-tolerant insertion, flush-on-full, merge-on-duplicate.  O(n) work,
+  imperfect coalescing under conflicts — the paper's actual design point.
+  Backed by kernels/iru_reorder (Pallas; interpret=True on CPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import coalescing
+from repro.core import filter as filt
+
+Mode = Literal["sort", "hash", "hash_ref"]
+
+
+@dataclasses.dataclass(frozen=True)
+class IRUConfig:
+    """Host-side ``configure_iru`` parameters, TPU edition.
+
+    ``target_elem_bytes`` is the paper's ``target_array_data_type_size``: it
+    fixes how indices map to 128 B memory blocks and therefore what the
+    reorder optimizes.  ``filter_op`` enables the merge datapath.
+    """
+
+    target_elem_bytes: int = 4
+    block_bytes: int = coalescing.BLOCK_BYTES
+    mode: Mode = "sort"
+    filter_op: Optional[filt.FilterOp] = None
+    compact: bool = True  # group disabled lanes at the tail (whole-warp disable)
+    # hash-engine geometry (paper: 1024 sets x 32 slots, 4 partitions)
+    num_sets: int = 1024
+    slots: int = 32
+    interpret: Optional[bool] = None  # None = auto (interpret off-TPU)
+    # bounded lookahead: the hardware IRU reorders a *streaming window* (hash
+    # occupancy under warp-request drain + timeout, §3.2.2), never the whole
+    # frontier.  When set, the stream is processed in independent chunks of
+    # this many elements — duplicates merge only within a window, exactly the
+    # paper's "merges only elements found concurrently on the IRU" (§4.1).
+    window_elems: Optional[int] = None
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class IRUStream:
+    """Reordered irregular-access stream (the ``load_iru`` reply)."""
+
+    indices: jax.Array        # int32[n] reordered indices
+    secondary: jax.Array      # payload co-reordered / merged, [n] or [n, k]
+    positions: jax.Array      # int32[n] original position of each element
+    active: jax.Array         # bool[n]  False => merged/filtered out
+
+    def __len__(self) -> int:
+        return self.indices.shape[0]
+
+
+def _block_key(indices: jax.Array, cfg: IRUConfig) -> jax.Array:
+    return coalescing.block_ids(indices, cfg.target_elem_bytes, cfg.block_bytes)
+
+
+def iru_reorder(
+    indices: jax.Array,
+    secondary: jax.Array | None = None,
+    *,
+    config: IRUConfig = IRUConfig(),
+) -> IRUStream:
+    """Reorder (and optionally merge) an irregular-access index stream."""
+    indices = indices.astype(jnp.int32)
+    n = indices.shape[0]
+    if secondary is None:
+        secondary = jnp.zeros((n,), jnp.float32)
+    w = config.window_elems
+    if w is not None and n > w:
+        # bounded-lookahead streaming: independent windows, concatenated
+        sub = dataclasses.replace(config, window_elems=None)
+        parts = [
+            iru_reorder(indices[s : s + w], secondary[s : s + w], config=sub)
+            for s in range(0, n, w)
+        ]
+        return IRUStream(
+            jnp.concatenate([p.indices for p in parts]),
+            jnp.concatenate([p.secondary for p in parts]),
+            jnp.concatenate([p.positions + s for p, s in
+                             zip(parts, range(0, n, w))]),
+            jnp.concatenate([p.active for p in parts]),
+        )
+    if config.mode == "sort":
+        stream = _sort_reorder(indices, secondary, config)
+    elif config.mode == "hash":
+        from repro.kernels.iru_reorder import ops as hash_ops  # local: avoid cycle
+
+        stream = hash_ops.hash_reorder(
+            indices,
+            secondary,
+            num_sets=config.num_sets,
+            slots=config.slots,
+            elem_bytes=config.target_elem_bytes,
+            block_bytes=config.block_bytes,
+            filter_op=config.filter_op,
+            interpret=config.interpret,
+        )
+    elif config.mode == "hash_ref":
+        # numpy oracle of the hash engine — bit-identical semantics, no
+        # tracing; the host-side benchmark drivers use this for big frontiers
+        # (the interpret-mode Pallas kernel is element-sequential in Python).
+        import numpy as np
+
+        from repro.kernels.iru_reorder.ref import hash_reorder_ref
+
+        oi, osec, opos, oact = hash_reorder_ref(
+            np.asarray(indices), np.asarray(secondary),
+            num_sets=config.num_sets, slots=config.slots,
+            elem_bytes=config.target_elem_bytes, block_bytes=config.block_bytes,
+            filter_op=config.filter_op)
+        stream = IRUStream(jnp.asarray(oi), jnp.asarray(osec),
+                           jnp.asarray(opos), jnp.asarray(oact))
+    else:
+        raise ValueError(f"unknown IRU mode {config.mode!r}")
+    if config.compact and config.filter_op is not None:
+        act, idx, sec, pos = filt.compact(
+            stream.active, stream.indices, stream.secondary, stream.positions
+        )
+        stream = IRUStream(idx, sec, pos, act)
+    return stream
+
+
+def _sort_reorder(indices: jax.Array, secondary: jax.Array, cfg: IRUConfig) -> IRUStream:
+    # Stable sort on the index value: groups equal memory blocks AND makes
+    # duplicate indices adjacent for the merge stage.  (block id is monotone
+    # in the index, so sorting by index implies sorting by block.)
+    order = jnp.argsort(indices, stable=True)
+    idx = indices[order]
+    sec = jnp.take(secondary, order, axis=0)
+    pos = order.astype(jnp.int32)
+    if cfg.filter_op is None:
+        active = jnp.ones((indices.shape[0],), jnp.bool_)
+        return IRUStream(idx, sec, pos, active)
+    merged, survivors = filt.merge_sorted(idx, sec, cfg.filter_op)
+    return IRUStream(idx, merged, pos, survivors)
+
+
+# ----------------------------------------------------------------------------
+# Convenience wrappers mirroring the paper's instrumented kernels (§4.1)
+# ----------------------------------------------------------------------------
+
+def load_iru_gather(
+    table: jax.Array,
+    indices: jax.Array,
+    *,
+    config: IRUConfig = IRUConfig(),
+) -> tuple[jax.Array, IRUStream]:
+    """BFS pattern (Fig. 8): reorder indices, then gather ``table[idx]``.
+
+    Returns the gathered rows *in reordered order* plus the stream so the
+    caller can undo / correlate via ``stream.positions``.
+    """
+    stream = iru_reorder(indices, config=config)
+    return jnp.take(table, stream.indices, axis=0), stream
+
+
+def iru_scatter_add(
+    target: jax.Array,
+    indices: jax.Array,
+    values: jax.Array,
+    *,
+    config: IRUConfig | None = None,
+) -> jax.Array:
+    """PageRank pattern (Fig. 10): merged ``atomicAdd`` into ``target``.
+
+    Duplicates are pre-merged by the IRU so each unique destination receives
+    exactly one update — one segment-sum plus a duplicate-free scatter,
+    replacing n potentially-colliding atomics.
+    """
+    cfg = dataclasses.replace(config or IRUConfig(), filter_op="add")
+    stream = iru_reorder(indices, values, config=cfg)
+    # merged-out lanes scatter to an out-of-range slot -> dropped entirely
+    dest = jnp.where(stream.active, stream.indices, target.shape[0])
+    return target.at[dest].add(stream.secondary, mode="drop")
+
+
+def iru_scatter_min(
+    target: jax.Array,
+    indices: jax.Array,
+    values: jax.Array,
+    *,
+    config: IRUConfig | None = None,
+) -> jax.Array:
+    """SSSP pattern (Fig. 9): merged ``atomicMin`` into ``target``."""
+    cfg = dataclasses.replace(config or IRUConfig(), filter_op="min")
+    stream = iru_reorder(indices, values, config=cfg)
+    # merged-out lanes scatter to an out-of-range slot -> dropped entirely
+    dest = jnp.where(stream.active, stream.indices, target.shape[0])
+    return target.at[dest].min(stream.secondary, mode="drop")

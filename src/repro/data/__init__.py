@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, batch_specs, make_batch, synthetic_stream
+
+__all__ = ["DataConfig", "batch_specs", "make_batch", "synthetic_stream"]

@@ -1,0 +1,90 @@
+"""Deterministic, stateless-resumable data pipeline.
+
+``make_batch(cfg, shape, step)`` is a *pure function* of (config, step): a
+restart at step k replays the identical stream with no loader state in the
+checkpoint — the fault-tolerance contract (DESIGN.md §8).  Batches are
+synthetic token streams with a Zipfian unigram distribution (vocab accesses
+are realistically skewed, which is what exercises the IRU embedding path:
+duplicate-heavy index streams).
+
+``batch_specs`` returns the matching ShapeDtypeStructs + logical axes for the
+dry-run and for sharded host feeding.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    zipf_a: float = 1.2          # unigram skew; a -> 1 = heavier duplicates
+
+
+N_PATCHES = 576  # keep in sync with models.transformer.N_PATCHES
+
+
+def _zipf_tokens(rng: np.random.Generator, vocab: int, shape, a: float) -> np.ndarray:
+    z = rng.zipf(a, size=shape).astype(np.int64)
+    return ((z - 1) % vocab).astype(np.int32)
+
+
+def batch_fields(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, tuple[tuple[int, ...], object, tuple]]:
+    """name -> (shape, dtype, logical_axes) for a *training* batch."""
+    B, S = shape.global_batch, shape.seq_len
+    fields: dict = {}
+    if cfg.family == "vlm":
+        n_p = min(N_PATCHES, S // 2)  # reduced smoke shapes keep text room
+        fields["patches"] = ((B, n_p, cfg.d_model), cfg.dtype, ("batch", "seq", "embed"))
+        fields["tokens"] = ((B, S - n_p), jnp.int32, ("batch", "seq"))
+        fields["labels"] = ((B, S), jnp.int32, ("batch", "seq"))
+    elif cfg.frontend == "embeds" and not cfg.encoder_layers:
+        fields["embeds"] = ((B, S, cfg.d_model), cfg.dtype, ("batch", "seq", "embed"))
+        fields["labels"] = ((B, S), jnp.int32, ("batch", "seq"))
+    else:
+        fields["tokens"] = ((B, S), jnp.int32, ("batch", "seq"))
+        fields["labels"] = ((B, S), jnp.int32, ("batch", "seq"))
+    if cfg.encoder_layers:
+        fields["frames"] = ((B, cfg.encoder_frames, cfg.d_model), cfg.dtype,
+                            ("batch", "frames", "embed"))
+    return fields
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """(ShapeDtypeStruct tree, logical-axes tree) for the dry-run."""
+    fields = batch_fields(cfg, shape)
+    structs = {k: jax.ShapeDtypeStruct(s, d) for k, (s, d, _) in fields.items()}
+    axes = {k: a for k, (s, d, a) in fields.items()}
+    return structs, axes
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig, step: int,
+               data: DataConfig = DataConfig()) -> dict:
+    """Pure (config, step) -> batch. Restart-replayable by construction."""
+    rng = np.random.default_rng(np.random.SeedSequence([data.seed, step]))
+    out = {}
+    for k, (shp, dt, _) in batch_fields(cfg, shape).items():
+        if k in ("tokens", "labels"):
+            out[k] = jnp.asarray(_zipf_tokens(rng, cfg.vocab_size, shp, data.zipf_a))
+        else:
+            out[k] = jnp.asarray(rng.standard_normal(shp, np.float32) * 0.02, dt)
+    # make labels the shifted tokens where both exist (teacher forcing)
+    if "tokens" in out and "labels" in out and out["tokens"].shape == out["labels"].shape:
+        out["labels"] = jnp.concatenate(
+            [out["tokens"][:, 1:], out["tokens"][:, :1]], axis=1)
+    return out
+
+
+def synthetic_stream(cfg: ModelConfig, shape: ShapeConfig, start_step: int = 0,
+                     data: DataConfig = DataConfig()):
+    """Infinite batch iterator starting at ``start_step`` (resume point)."""
+    step = start_step
+    while True:
+        yield step, make_batch(cfg, shape, step, data)
+        step += 1

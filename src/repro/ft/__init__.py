@@ -1,0 +1,4 @@
+from repro.ft.failures import FaultInjector, FaultPlan
+from repro.ft.supervisor import Supervisor, SupervisorConfig
+
+__all__ = ["FaultInjector", "FaultPlan", "Supervisor", "SupervisorConfig"]

@@ -1,0 +1,44 @@
+"""Deterministic fault injection for supervisor tests.
+
+At cluster scale the failure modes that matter per step are: a worker dying
+(preemption / hardware), a step hanging (network partition, straggler), and
+numerically poisoned updates (SDC, bad reduction).  ``FaultInjector`` raises
+or delays at scripted steps so tests can assert the supervisor's recovery
+behaviour without nondeterminism.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+class WorkerDied(RuntimeError):
+    """Simulated node failure (preemption, hardware loss)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    die_at: tuple[int, ...] = ()        # steps raising WorkerDied
+    hang_at: tuple[int, ...] = ()       # steps sleeping past the deadline
+    nan_at: tuple[int, ...] = ()        # steps whose loss is poisoned to NaN
+    hang_seconds: float = 0.2
+
+
+@dataclasses.dataclass
+class FaultInjector:
+    plan: FaultPlan = FaultPlan()
+    fired: set = dataclasses.field(default_factory=set)
+
+    def before_step(self, step: int) -> None:
+        if step in self.plan.die_at and ("die", step) not in self.fired:
+            self.fired.add(("die", step))
+            raise WorkerDied(f"injected node failure at step {step}")
+        if step in self.plan.hang_at and ("hang", step) not in self.fired:
+            self.fired.add(("hang", step))
+            time.sleep(self.plan.hang_seconds)
+
+    def poison_loss(self, step: int, loss: float) -> float:
+        if step in self.plan.nan_at and ("nan", step) not in self.fired:
+            self.fired.add(("nan", step))
+            return float("nan")
+        return loss

@@ -1,0 +1,132 @@
+"""Supervised training loop: checkpoint/restart, stragglers, NaN quarantine.
+
+The supervisor wraps a step function with the recovery policy a 1000-node
+deployment needs; at container scale the same policy runs against injected
+faults (repro.ft.failures):
+
+* **Checkpoint/restart** — periodic async checkpoints; on a worker death the
+  loop restores the latest checkpoint and replays from there (the data
+  pipeline is a pure function of the step, so replay is exact).
+* **Straggler mitigation** — a per-step wall-clock deadline (EWMA of recent
+  step times x ``straggler_factor``); a step exceeding it is counted, and
+  after ``max_straggles`` consecutive slow steps the supervisor treats the
+  worker set as degraded and restarts from checkpoint (at scale: onto a new
+  worker set — elastic restore handles the mesh change).
+* **NaN/inf quarantine** — a poisoned loss discards the step's update by
+  restoring params from the last checkpoint instead of propagating the
+  corruption into the weights.
+* **Bounded retry** — exponential backoff between restarts; gives up after
+  ``max_restarts`` so a permanently-broken job fails loudly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, Optional
+
+import jax
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.ft.failures import FaultInjector, WorkerDied
+
+
+@dataclasses.dataclass(frozen=True)
+class SupervisorConfig:
+    ckpt_every: int = 50
+    straggler_factor: float = 3.0
+    max_straggles: int = 3
+    max_restarts: int = 5
+    backoff_base_s: float = 0.01
+    ewma: float = 0.9
+
+
+@dataclasses.dataclass
+class Supervisor:
+    manager: CheckpointManager
+    config: SupervisorConfig = SupervisorConfig()
+    injector: Optional[FaultInjector] = None
+    # telemetry
+    restarts: int = 0
+    straggles: int = 0
+    nan_events: int = 0
+    history: list = dataclasses.field(default_factory=list)
+    _last_nan_step: int = -1
+
+    def run(
+        self,
+        state,
+        step_fn: Callable,          # (state, batch) -> (state, metrics)
+        batch_fn: Callable,         # step -> batch (pure; replayable)
+        start_step: int,
+        num_steps: int,
+    ):
+        """Run ``num_steps`` with recovery. Returns (state, last_step)."""
+        cfg = self.config
+        step = start_step
+        ewma_dt: Optional[float] = None
+        consecutive_slow = 0
+        while step < start_step + num_steps:
+            try:
+                if self.injector is not None:
+                    self.injector.before_step(step)
+                t0 = time.monotonic()
+                batch = batch_fn(step)
+                state, metrics = step_fn(state, batch)
+                loss = float(metrics["loss"])
+                if self.injector is not None:
+                    loss = self.injector.poison_loss(step, loss)
+                dt = time.monotonic() - t0
+
+                if not math.isfinite(loss):
+                    # quarantine: drop this update, restore last good params.
+                    # A deterministically-poisoned batch (second NaN at the
+                    # same step) is skipped instead of replayed forever.
+                    self.nan_events += 1
+                    state = self._restore(state)
+                    if step == self._last_nan_step:
+                        step += 1
+                    else:
+                        self._last_nan_step = step
+                        step = self._restored_step(step)
+                    continue
+
+                ewma_dt = dt if ewma_dt is None else cfg.ewma * ewma_dt + (1 - cfg.ewma) * dt
+                if ewma_dt is not None and dt > cfg.straggler_factor * max(ewma_dt, 1e-9) and step > start_step:
+                    consecutive_slow += 1
+                    self.straggles += 1
+                    if consecutive_slow >= cfg.max_straggles:
+                        consecutive_slow = 0
+                        state = self._restore(state)
+                        step = self._restored_step(step)
+                        continue
+                else:
+                    consecutive_slow = 0
+
+                self.history.append({"step": step, "loss": loss, "dt": dt})
+                step += 1
+                if step % cfg.ckpt_every == 0:
+                    self.manager.save(step, state)
+            except WorkerDied:
+                self.restarts += 1
+                if self.restarts > cfg.max_restarts:
+                    raise
+                time.sleep(cfg.backoff_base_s * (2 ** (self.restarts - 1)))
+                state = self._restore(state)
+                step = self._restored_step(step)
+        self.manager.save(step, state, blocking=True)
+        return state, step
+
+    # ------------------------------------------------------------------
+    def _restore(self, fallback_state):
+        try:
+            target = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), fallback_state)
+            return self.manager.restore_latest(target)
+        except FileNotFoundError:
+            return fallback_state  # nothing saved yet: restart from current
+
+    def _restored_step(self, current_step: int) -> int:
+        from repro.ckpt.checkpoint import latest_step
+
+        s = latest_step(self.manager.ckpt_dir)
+        return s if s is not None else current_step

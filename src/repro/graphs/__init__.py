@@ -1,0 +1,5 @@
+"""Graph substrate: CSR structures, Table-3-like synthetic datasets, frontiers."""
+from repro.graphs.csr import CSRGraph, from_edges
+from repro.graphs.generators import DATASETS, make_dataset
+
+__all__ = ["CSRGraph", "from_edges", "DATASETS", "make_dataset"]

@@ -1,0 +1,74 @@
+"""Compressed Sparse Row graph container (paper §2.1: CSR is the standard
+GPGPU graph layout; the IRU consumes its edge frontiers).
+
+Arrays live as jax arrays so apps can jit over them; builders accept numpy.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CSRGraph:
+    row_ptr: jax.Array   # int32[n_nodes + 1]
+    col_idx: jax.Array   # int32[n_edges]  (destination node per edge)
+    weights: jax.Array   # float32[n_edges]
+
+    @property
+    def n_nodes(self) -> int:
+        return self.row_ptr.shape[0] - 1
+
+    @property
+    def n_edges(self) -> int:
+        return self.col_idx.shape[0]
+
+    def degrees(self) -> jax.Array:
+        return self.row_ptr[1:] - self.row_ptr[:-1]
+
+    def edge_sources(self) -> jax.Array:
+        """int32[n_edges] source node of each edge (expanded row_ptr)."""
+        deg = np.asarray(self.degrees())
+        return jnp.asarray(np.repeat(np.arange(self.n_nodes, dtype=np.int32), deg))
+
+    def avg_degree(self) -> float:
+        return self.n_edges / max(self.n_nodes, 1)
+
+
+def from_edges(
+    src: np.ndarray,
+    dst: np.ndarray,
+    n_nodes: int,
+    weights: np.ndarray | None = None,
+    *,
+    dedup: bool = True,
+    symmetrize: bool = False,
+) -> CSRGraph:
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    if weights is None:
+        weights = np.ones(src.shape[0], np.float32)
+    weights = np.asarray(weights, np.float32)
+    if symmetrize:
+        src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+        weights = np.concatenate([weights, weights])
+    keep = (src != dst) & (src >= 0) & (dst >= 0) & (src < n_nodes) & (dst < n_nodes)
+    src, dst, weights = src[keep], dst[keep], weights[keep]
+    if dedup:
+        key = src * n_nodes + dst
+        _, first = np.unique(key, return_index=True)
+        src, dst, weights = src[first], dst[first], weights[first]
+    order = np.lexsort((dst, src))
+    src, dst, weights = src[order], dst[order], weights[order]
+    row_ptr = np.zeros(n_nodes + 1, np.int64)
+    np.add.at(row_ptr, src + 1, 1)
+    row_ptr = np.cumsum(row_ptr)
+    return CSRGraph(
+        row_ptr=jnp.asarray(row_ptr, jnp.int32),
+        col_idx=jnp.asarray(dst, jnp.int32),
+        weights=jnp.asarray(weights),
+    )

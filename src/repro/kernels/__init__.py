@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the IRU's compute hot-spots.
+
+Each kernel directory holds:
+  <name>.py — pl.pallas_call + BlockSpec implementation (TPU target,
+              validated under interpret=True on CPU)
+  ops.py    — jit'd public wrapper (platform dispatch / fallbacks)
+  ref.py    — pure-jnp / numpy oracle the tests assert against
+
+Kernels:
+  iru_reorder      — the reordering hash (paper §3.2-3.3), bounded O(n) binning
+  segment_merge    — duplicate merge (filter unit: fp-add / int-min / int-max)
+  coalesced_gather — block-reuse gather for binned streams (+ timeout fallback)
+"""

@@ -1,0 +1,90 @@
+"""Pallas kernel: block-reuse gather for IRU-binned index streams.
+
+The GPU coalescer's win is that 32 binned indices touch one 128 B line → one
+L1 request.  The TPU analogue: once the IRU bins a stream, each group of G
+consecutive output rows reads table rows inside a narrow, aligned window.
+The kernel stages that window HBM→VMEM once per group (two adjacent
+``window``-row table blocks, so runs crossing a window boundary stay legal)
+and services all G rows from VMEM — each HBM block is fetched once, exactly
+the hardware's block-reuse.
+
+Contract: for every group g of G indices,
+    max(idx) < (min(idx) // window + 2) * window
+ops.py verifies this and falls back to ``jnp.take`` when violated — the
+software analogue of the IRU timeout (trades coalescing for progress, never
+correctness).
+
+Scalar prefetch feeds the per-group window anchor to the BlockSpec index_map
+(classic Pallas sparse-access pattern).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(base_ref, off_ref, win0_ref, win1_ref, out_ref, *, group: int, window: int):
+    del base_ref  # consumed by the index_maps
+    for j in range(group):  # static unroll: G rows serviced from VMEM
+        o = off_ref[j]
+        in_w0 = o < window
+        o0 = jnp.where(in_w0, o, 0)
+        o1 = jnp.where(in_w0, 0, o - window)
+        r0 = pl.load(win0_ref, (pl.ds(o0, 1), slice(None)))
+        r1 = pl.load(win1_ref, (pl.ds(o1, 1), slice(None)))
+        out_ref[j, :] = jnp.where(in_w0, r0, r1).reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("group", "window", "interpret"))
+def coalesced_gather_pallas(
+    table: jax.Array,
+    indices: jax.Array,
+    *,
+    group: int = 8,
+    window: int = 128,
+    interpret: bool = True,
+):
+    """Gather ``table[indices]`` assuming the window contract holds."""
+    v, d = table.shape
+    n = indices.shape[0]
+    pad = (-n) % group
+    idx = jnp.concatenate([indices.astype(jnp.int32), jnp.zeros((pad,), jnp.int32)])
+    m = idx.shape[0]
+    groups = m // group
+    gidx = idx.reshape(groups, group)
+    base = jnp.min(gidx, axis=1) // window                    # window-block anchor
+    nblocks = -(-v // window)
+    base = jnp.minimum(base, jnp.maximum(nblocks - 2, 0))     # keep win1 in range
+    off = jnp.clip(idx - jnp.repeat(base, group) * window, 0, 2 * window - 1)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, group=group, window=window),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(groups,),
+            in_specs=[
+                pl.BlockSpec((group,), lambda g, base: (g,), memory_space=pltpu.SMEM),
+                pl.BlockSpec((window, d), lambda g, base: (base[g], 0)),
+                pl.BlockSpec((window, d), lambda g, base: (base[g] + 1, 0)),
+            ],
+            out_specs=pl.BlockSpec((group, d), lambda g, base: (g, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, d), table.dtype),
+        interpret=interpret,
+    )(base, off, table, table)
+    return out[:n]
+
+
+def window_contract_ok(indices: jax.Array, *, group: int = 8, window: int = 128) -> jax.Array:
+    """True iff every G-group spans < 2 aligned windows (kernel usable)."""
+    n = indices.shape[0]
+    pad = (-n) % group
+    idx = jnp.concatenate([indices.astype(jnp.int32), jnp.full((pad,), indices[0] if n else 0, jnp.int32)])
+    g = idx.reshape(-1, group)
+    lo = jnp.min(g, axis=1) // window
+    hi = jnp.max(g, axis=1)
+    return jnp.all(hi < (lo + 2) * window)

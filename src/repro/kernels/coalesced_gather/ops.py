@@ -1,0 +1,43 @@
+"""jit'd wrapper: binned-gather fast path with timeout-style fallback.
+
+Mirrors the IRU Data Replier: if the stream is well binned (window contract
+holds) the block-reuse kernel services it; otherwise we fall back to the
+baseline gather — worse coalescing, never a stall (paper §3.2.2 timeout).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.coalesced_gather.coalesced_gather import (
+    coalesced_gather_pallas,
+    window_contract_ok,
+)
+from repro.kernels.coalesced_gather.ref import coalesced_gather_ref
+
+
+@functools.partial(jax.jit, static_argnames=("group", "window", "use_pallas", "interpret"))
+def coalesced_gather(
+    table: jax.Array,
+    indices: jax.Array,
+    *,
+    group: int = 8,
+    window: int = 128,
+    use_pallas: bool = True,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    if not use_pallas:
+        return coalesced_gather_ref(table, indices)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    ok = window_contract_ok(indices, group=group, window=window)
+    return jax.lax.cond(
+        ok,
+        lambda t, i: coalesced_gather_pallas(t, i, group=group, window=window, interpret=interpret),
+        coalesced_gather_ref,
+        table,
+        indices,
+    )

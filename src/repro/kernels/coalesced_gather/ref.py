@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the coalesced gather: a plain row gather."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def coalesced_gather_ref(table: jax.Array, indices: jax.Array) -> jax.Array:
+    return jnp.take(table, indices.astype(jnp.int32), axis=0)

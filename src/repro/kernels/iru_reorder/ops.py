@@ -1,0 +1,44 @@
+"""jit'd public wrapper around the IRU hash-reorder kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.iru_reorder.iru_reorder import hash_reorder_pallas
+
+
+def _auto_interpret(flag: Optional[bool]) -> bool:
+    if flag is not None:
+        return flag
+    return jax.default_backend() != "tpu"
+
+
+def hash_reorder(
+    indices: jax.Array,
+    secondary: jax.Array | None = None,
+    *,
+    num_sets: int = 1024,
+    slots: int = 32,
+    elem_bytes: int = 4,
+    block_bytes: int = 128,
+    filter_op: Optional[str] = None,
+    interpret: Optional[bool] = None,
+):
+    """Paper-faithful O(n) bounded reorder. Returns an ``IRUStream``."""
+    from repro.core.iru import IRUStream  # late import: core imports us lazily
+
+    if secondary is None:
+        secondary = jnp.zeros(indices.shape, jnp.float32)
+    out_idx, out_sec, out_pos, out_act = hash_reorder_pallas(
+        indices,
+        secondary,
+        num_sets=num_sets,
+        slots=slots,
+        elem_bytes=elem_bytes,
+        block_bytes=block_bytes,
+        filter_op=filter_op,
+        interpret=_auto_interpret(interpret),
+    )
+    return IRUStream(out_idx, out_sec, out_pos, out_act)

@@ -1,0 +1,110 @@
+"""Pure-numpy oracle for the IRU reordering hash (paper §3.2-3.3).
+
+Deterministic hardware semantics shared by this oracle and the Pallas kernel:
+
+* key      = index // (block_bytes // elem_bytes)            (memory block id)
+* set      = mix(key) % num_sets   (multiplicative hash, good dispersion)
+* insert   : conflict-tolerant — a set accepts an element even if its block
+             tag differs from the residents' (paper §3.3: avoids conflict
+             handling; costs coalescing, never correctness).
+* merge    : with a filter op, an incoming element whose *index* equals a
+             resident's is merged into it (add/min/max on the secondary
+             payload) and does not occupy a slot — the element is filtered.
+* flush    : when a set reaches ``slots`` residents it is emitted to the
+             output stream in insertion order and cleared (the Data Replier
+             servicing a full entry to a warp).
+* drain    : at end-of-stream, surviving sets are emitted in set order
+             (entries are never split across replies, §3.2.2).
+* layout   : survivors occupy the output front in emission order; filtered
+             elements fill the tail in REVERSE detection order with
+             ``active=False`` (the IRU groups disabled threads into whole
+             warps; the reversal matches the kernel's tail cursor).
+
+Outputs are a permutation of the inputs over (index, position); survivors
+carry merged secondary payloads, filtered lanes keep their original payload.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_MIX = np.uint64(2654435761)
+
+
+def hash_set(key: np.ndarray, num_sets: int) -> np.ndarray:
+    h = (key.astype(np.uint64) * _MIX) & np.uint64(0xFFFFFFFF)
+    h = h ^ (h >> np.uint64(16))
+    return (h % np.uint64(num_sets)).astype(np.int64)
+
+
+def hash_reorder_ref(
+    indices: np.ndarray,
+    secondary: np.ndarray,
+    *,
+    num_sets: int = 1024,
+    slots: int = 32,
+    elem_bytes: int = 4,
+    block_bytes: int = 128,
+    filter_op: str | None = None,
+):
+    indices = np.asarray(indices, np.int32)
+    secondary = np.asarray(secondary)
+    n = indices.shape[0]
+    epb = block_bytes // elem_bytes
+
+    tbl_idx = np.zeros((num_sets, slots), np.int32)
+    tbl_sec = np.zeros((num_sets, slots), secondary.dtype)
+    tbl_pos = np.zeros((num_sets, slots), np.int32)
+    cnt = np.zeros(num_sets, np.int32)
+
+    out_idx = np.zeros(n, np.int32)
+    out_sec = np.zeros(n, secondary.dtype)
+    out_pos = np.zeros(n, np.int32)
+    out_act = np.zeros(n, bool)
+    head = 0         # survivors cursor (front)
+    tail = 0         # filtered cursor (back, reverse detection order)
+
+    def flush(s: int):
+        nonlocal head
+        c = int(cnt[s])
+        out_idx[head : head + c] = tbl_idx[s, :c]
+        out_sec[head : head + c] = tbl_sec[s, :c]
+        out_pos[head : head + c] = tbl_pos[s, :c]
+        out_act[head : head + c] = True
+        head += c
+        cnt[s] = 0
+
+    for i in range(n):
+        idx = indices[i]
+        key = idx // epb
+        s = int(hash_set(np.asarray(key), num_sets))
+        c = int(cnt[s])
+        if filter_op is not None:
+            match = np.nonzero(tbl_idx[s, :c] == idx)[0]
+            if match.size:
+                j = int(match[0])
+                if filter_op == "add":
+                    tbl_sec[s, j] = tbl_sec[s, j] + secondary[i]
+                elif filter_op == "min":
+                    tbl_sec[s, j] = min(tbl_sec[s, j], secondary[i])
+                elif filter_op == "max":
+                    tbl_sec[s, j] = max(tbl_sec[s, j], secondary[i])
+                else:
+                    raise ValueError(filter_op)
+                tail += 1
+                out_idx[n - tail] = idx
+                out_sec[n - tail] = secondary[i]
+                out_pos[n - tail] = i
+                out_act[n - tail] = False
+                continue
+        tbl_idx[s, c] = idx
+        tbl_sec[s, c] = secondary[i]
+        tbl_pos[s, c] = i
+        cnt[s] = c + 1
+        if cnt[s] == slots:
+            flush(s)
+
+    for s in range(num_sets):
+        if cnt[s]:
+            flush(s)
+    assert head == n - tail
+    return out_idx, out_sec, out_pos, out_act

@@ -1,0 +1,26 @@
+"""jit'd public wrapper for the segment-merge kernel with CPU fallback."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels.segment_merge.ref import segment_merge_ref
+from repro.kernels.segment_merge.segment_merge import segment_merge_pallas
+
+
+def segment_merge(
+    sorted_indices: jax.Array,
+    values: jax.Array,
+    *,
+    op: str = "add",
+    chunk: int = 512,
+    use_pallas: bool = True,
+    interpret: Optional[bool] = None,
+):
+    """Merge duplicate adjacent indices; returns ``(merged, survivor_mask)``."""
+    if not use_pallas:
+        return segment_merge_ref(sorted_indices, values, op)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return segment_merge_pallas(sorted_indices, values, op=op, chunk=chunk, interpret=interpret)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the segment-merge kernel.
+
+``merged`` carries the FULL segment reduction at every lane of the run (the
+kernel only guarantees survivor lanes; tests compare survivor lanes plus the
+mask).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.filter import merge_sorted
+
+
+def segment_merge_ref(sorted_indices: jax.Array, values: jax.Array, op: str = "add"):
+    merged, survivors = merge_sorted(sorted_indices.astype(jnp.int32), values, op)
+    return merged, survivors

@@ -1,0 +1,113 @@
+"""Pallas kernel: duplicate merge over a sorted index stream (IRU filter unit).
+
+After the IRU bins a stream, duplicate indices are adjacent; the hardware
+merges them with fp-add / int-min comparators at hash-insert time.  The TPU
+formulation is a segmented suffix reduction over the sorted stream: the first
+lane of each run (the survivor) receives the full merged payload, all other
+lanes are deactivated.
+
+Kernel structure: the grid walks chunks of the stream in REVERSE order; a
+(carry index, carry value) pair in SMEM threads the reduction of a run that
+crosses the chunk boundary.  Within a chunk the reduction is a segmented
+``lax.associative_scan`` over the flipped block (log-depth on the VPU).
+
+Contract (matches ref.segment_merge_ref):
+  merged[i]    — full segment reduction, valid where survivor[i]
+  survivor[i]  — True iff i is the first lane of its run
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_IDENTITY = {
+    "add": lambda dt: jnp.zeros((), dt),
+    "min": lambda dt: jnp.asarray(jnp.iinfo(dt).max if jnp.issubdtype(dt, jnp.integer) else jnp.inf, dt),
+    "max": lambda dt: jnp.asarray(jnp.iinfo(dt).min if jnp.issubdtype(dt, jnp.integer) else -jnp.inf, dt),
+}
+
+_OPS = {
+    "add": lambda a, b: a + b,
+    "min": jnp.minimum,
+    "max": jnp.maximum,
+}
+
+
+def _kernel(idx_ref, prev_ref, val_ref, merged_ref, surv_ref, carry_idx, carry_val, *, op: str):
+    g = pl.program_id(0)
+    combine_val = _OPS[op]
+
+    idx = idx_ref[...]
+    val = val_ref[...]
+    prev = prev_ref[...]
+
+    rid = jnp.flip(idx)
+    rval = jnp.flip(val)
+
+    # Inject the carry from the chunk to our right (processed previously).
+    has_carry = g > 0
+    cmatch = has_carry & (rid[0] == carry_idx[0])
+    rval = rval.at[0].set(jnp.where(cmatch, combine_val(rval[0], carry_val[0]), rval[0]))
+
+    def seg_combine(left, right):
+        il, vl = left
+        ir, vr = right
+        return ir, jnp.where(il == ir, combine_val(vl, vr), vr)
+
+    _, scanned = jax.lax.associative_scan(seg_combine, (rid, rval))
+    merged = jnp.flip(scanned)
+
+    merged_ref[...] = merged
+    surv_ref[...] = (idx != prev).astype(jnp.int32)
+
+    carry_idx[0] = idx[0]
+    carry_val[0] = merged[0]
+
+
+@functools.partial(jax.jit, static_argnames=("op", "chunk", "interpret"))
+def segment_merge_pallas(
+    sorted_indices: jax.Array,
+    values: jax.Array,
+    *,
+    op: str = "add",
+    chunk: int = 512,
+    interpret: bool = True,
+):
+    n = sorted_indices.shape[0]
+    dt = values.dtype
+    ident = _IDENTITY[op](dt)
+    pad = (-n) % chunk
+    idx = jnp.concatenate([sorted_indices.astype(jnp.int32), jnp.full((pad,), jnp.iinfo(jnp.int32).max, jnp.int32)])
+    val = jnp.concatenate([values, jnp.full((pad,), ident, dt)])
+    prev = jnp.concatenate([idx[:1] - 1, idx[:-1]])
+    m = idx.shape[0]
+    grid = m // chunk
+    rev = lambda g: ((grid - 1 - g),)  # reverse-order chunk walk
+
+    merged, surv = pl.pallas_call(
+        functools.partial(_kernel, op=op),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((chunk,), rev),
+            pl.BlockSpec((chunk,), rev),
+            pl.BlockSpec((chunk,), rev),
+        ],
+        out_specs=[
+            pl.BlockSpec((chunk,), rev),
+            pl.BlockSpec((chunk,), rev),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m,), dt),
+            jax.ShapeDtypeStruct((m,), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.SMEM((1,), jnp.int32),
+            pltpu.SMEM((1,), dt),
+        ],
+        interpret=interpret,
+    )(idx, prev, val)
+    return merged[:n], surv[:n].astype(jnp.bool_)

@@ -1,0 +1,95 @@
+"""Sharding resolution for whole program states (params / opt / batch / cache).
+
+Bridges the logical-axis spec trees produced by the model layer onto
+NamedShardings for a concrete mesh, including the ZeRO-style optimizer-state
+extension and the per-arch ParallelConfig defaults used by the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
+from repro.dist.sharding import resolve_spec, zero_fragment
+
+
+def _is_axes(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+
+
+def shard_tree(shapes, axes, mesh: Mesh, *, zero: bool = False):
+    """NamedShardings for a (shape-struct tree, logical-axes tree) pair."""
+
+    def one(axes_leaf, shaped):
+        spec = resolve_spec(axes_leaf, shaped.shape, mesh)
+        if zero:
+            spec = zero_fragment(spec, shaped.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(lambda a, s: one(a, s), axes, shapes, is_leaf=_is_axes)
+
+
+def state_shardings(state_shapes, param_specs, mesh: Mesh, *,
+                    fsdp_params: bool = False):
+    """Shardings for a TrainState {"params", "opt": {"m","v","step"}, "ef"?}."""
+    params = shard_tree(state_shapes["params"], param_specs, mesh, zero=fsdp_params)
+    out = {"params": params, "opt": {}}
+
+    def moment(axes_leaf, shaped):
+        # fp32/bf16 moments mirror the param; int8 dict leaves handled below
+        spec = resolve_spec(axes_leaf, shaped.shape, mesh)
+        spec = zero_fragment(spec, shaped.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    def moments_tree(shapes_tree):
+        # moments may be dicts (int8) — map leaf-wise against the param tree
+        def walk(ax, sh):
+            if isinstance(sh, dict) and "q" in sh:  # quantized moment
+                def qshard(leaf):
+                    rows = leaf.shape[0]
+                    ax0 = "data" if "data" in mesh.shape and rows % mesh.shape["data"] == 0 else None
+                    return NamedSharding(mesh, P(ax0, *([None] * (leaf.ndim - 1))))
+                return jax.tree.map(qshard, sh)
+            return moment(ax, sh)
+
+        return jax.tree.map(walk, param_specs, shapes_tree,
+                            is_leaf=lambda x: _is_axes(x))
+
+    out["opt"]["m"] = moments_tree(state_shapes["opt"]["m"])
+    out["opt"]["v"] = moments_tree(state_shapes["opt"]["v"])
+    out["opt"]["step"] = NamedSharding(mesh, P())
+    if "ef" in state_shapes:
+        out["ef"] = shard_tree(state_shapes["ef"], param_specs, mesh, zero=True)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Per-arch parallel configuration (dry-run defaults; §Perf iterates on these)
+# ---------------------------------------------------------------------------
+
+def default_pcfg(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> ParallelConfig:
+    model_axis = mesh.shape.get("model", 1)
+    micro = 1
+    if shape.kind == "train":
+        # keep per-microbatch tokens ~<= 64k per data shard for MoE buffers
+        data = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+        tokens_per_shard = shape.global_batch * shape.seq_len // max(data, 1)
+        if cfg.moe is not None:
+            micro = max(1, tokens_per_shard // 32_768)
+        elif cfg.d_model >= 6144:
+            micro = max(1, tokens_per_shard // 65_536)
+    # TP-sharded bf16 weights beyond ~8 GB/chip leave no room for
+    # activations/cache on 16 GB v5e -> shard params over data too (FSDP)
+    fsdp = cfg.params_billions() * 1e9 * 2 / model_axis > 8e9
+    return ParallelConfig(
+        model_axis=model_axis,
+        remat="full" if shape.kind == "train" else "none",
+        microbatches=micro,
+        # larger chunks for long prefill keep the unrolled measurement HLO
+        # (and the real TPU grid) at a manageable tile count
+        attn_chunk=2048 if shape.seq_len > 8192 else 1024,
+        fsdp_params=fsdp,
+    )

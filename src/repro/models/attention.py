@@ -1,0 +1,352 @@
+"""Attention mixers: GQA (RoPE, qk-norm, sliding window), MLA, cross-attention.
+
+All softmax statistics are computed in fp32.  Long sequences (> ``q_chunk``)
+use blockwise (flash-style) attention — an outer scan over query chunks with
+an inner scan over KV chunks carrying running (max, denominator, accumulator)
+— so no (S, S) score tensor is ever materialized.
+
+Causal block skipping: the inner KV scan runs over all blocks and masks
+(paper-faithful simplicity baseline); §Perf hillclimbs replace it with a
+lower-triangle pair walk.  Sliding-window attention restricts the inner scan
+statically to ``window // kv_chunk + 1`` blocks, making StarCoder2
+sub-quadratic (and long_500k feasible) by construction.
+
+Decode: single-token queries against a preallocated cache.  GQA caches
+(K, V); MLA caches the compressed c_kv only and uses the *absorbed* form
+(q is folded through W_uk; the context through W_uv) so no per-step
+materialization of full K/V ever happens — DeepSeek-V2's stated inference
+advantage, realized structurally.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Initializer, constrain, rms_norm
+from repro.models.measure import mscan
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def step_positions(pos: jax.Array | None, S: int) -> jax.Array:
+    """Positions for an S-token slice starting at ``pos``.
+
+    ``pos`` may be None (0), a scalar, or a per-batch (B,) vector (the
+    continuous-batching engine leases slots at independent offsets).
+    Returns (S,) or (B, S)."""
+    base = jnp.int32(0) if pos is None else jnp.asarray(pos, jnp.int32)
+    if base.ndim == 0:
+        return base + jnp.arange(S)
+    return base[:, None] + jnp.arange(S)[None, :]
+
+
+def cache_write(cache: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
+    """Write ``new`` (B, S, ...) into ``cache`` (B, S_max, ...) at ``pos``
+    (scalar) or per-batch offsets (B,) when S == 1."""
+    new = new.astype(cache.dtype)
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        idx = (0, pos) + (0,) * (cache.ndim - 2)
+        return jax.lax.dynamic_update_slice(cache, new, idx)
+    B = cache.shape[0]
+    assert new.shape[1] == 1, "vector pos requires single-step writes"
+    return cache.at[jnp.arange(B), pos].set(new[:, 0])
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd), positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (S, hd/2) or (B,S,hd/2)
+    if ang.ndim == 2:  # (S, hd/2) -> broadcast over batch
+        ang = ang[None]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+def init_gqa(it: Initializer, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+             *, qk_norm: bool = False) -> None:
+    it.weight("wq", (d_model, n_heads, head_dim), ("embed", "heads", None))
+    it.weight("wk", (d_model, n_kv, head_dim), ("embed", "kv_heads", None))
+    it.weight("wv", (d_model, n_kv, head_dim), ("embed", "kv_heads", None))
+    it.weight("wo", (n_heads, head_dim, d_model), ("heads", None, "embed"))
+    if qk_norm:
+        it.weight("q_norm", (head_dim,), (None,), init="ones")
+        it.weight("k_norm", (head_dim,), (None,), init="ones")
+
+
+def init_mla(it: Initializer, d_model: int, n_heads: int, head_dim: int,
+             kv_lora: int, rope_dim: int) -> None:
+    it.weight("w_dkv", (d_model, kv_lora + rope_dim), ("embed", "lora"))
+    it.weight("kv_norm", (kv_lora,), (None,), init="ones")
+    it.weight("w_uk", (kv_lora, n_heads, head_dim), ("lora", "heads", None))
+    it.weight("w_uv", (kv_lora, n_heads, head_dim), ("lora", "heads", None))
+    it.weight("wq", (d_model, n_heads, head_dim + rope_dim), ("embed", "heads", None))
+    it.weight("wo", (n_heads, head_dim, d_model), ("heads", None, "embed"))
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) attention core
+# ---------------------------------------------------------------------------
+
+def _attend_block(q, k, v, mask, scale):
+    """One (q-chunk, kv-chunk) tile. q: (B,Sq,KV,G,hd) k/v: (B,Sk,KV,hd)."""
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1)                                   # (B,KV,G,Sq)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bkgqh", p, v.astype(jnp.float32))
+    return m, l, o
+
+
+def blockwise_attn(
+    q: jax.Array,            # (B, Sq, H, hd)
+    k: jax.Array,            # (B, Sk, KV, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Memory-bounded exact attention. Returns (B, Sq, H, hd) in q.dtype."""
+    B, Sq0, H, hd = q.shape
+    Sk0, KV = k.shape[1], k.shape[2]
+    vd = v.shape[-1]                 # may differ from hd (MLA packs rope into q/k)
+    G = H // KV
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    q_chunk = min(q_chunk, Sq0)
+    kv_chunk = min(kv_chunk, Sk0)
+    # pad ragged sequence tails; padded kv positions are masked out below
+    qpad, kpad = (-Sq0) % q_chunk, (-Sk0) % kv_chunk
+    if qpad:
+        q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+    if kpad:
+        k = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    Sq, Sk = Sq0 + qpad, Sk0 + kpad
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+    qg = q.reshape(B, nq, q_chunk, KV, G, hd)
+    kg = k.reshape(B, nk, kv_chunk, KV, hd)
+    vg = v.reshape(B, nk, kv_chunk, KV, vd)
+    # sliding window: each q chunk needs at most w_blocks trailing kv chunks
+    w_blocks = nk if window is None else min(nk, window // kv_chunk + 1)
+
+    q_pos_base = jnp.arange(q_chunk)
+    k_pos_base = jnp.arange(kv_chunk)
+
+    def q_body(_, qi):
+        qc = qg[:, qi]                                        # (B,qc,KV,G,hd)
+        q_pos = q_offset + qi * q_chunk + q_pos_base
+
+        def kv_body(carry, kj):
+            m, l, acc = carry
+            in_range = (kj >= 0) & (kj < nk)
+            kj_safe = jnp.clip(kj, 0, nk - 1)
+            kc = kg[:, kj_safe]
+            vc = vg[:, kj_safe]
+            k_pos = kj_safe * kv_chunk + k_pos_base
+            mask = jnp.broadcast_to(k_pos[None, :] < Sk0, (q_chunk, kv_chunk))
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window is not None:
+                mask &= (q_pos[:, None] - k_pos[None, :]) < window
+            mask &= in_range
+            bm, bl, bo = _attend_block(qc, kc, vc, mask, scale)
+            new_m = jnp.maximum(m, bm)
+            c1 = jnp.exp(m - new_m)
+            c2 = jnp.exp(bm - new_m)
+            l = l * c1 + bl * c2
+            acc = acc * c1[..., None] + bo * c2[..., None]
+            return (new_m, l, acc), None
+
+        m0 = jnp.full((B, KV, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, q_chunk, vd), jnp.float32)
+        if window is None:
+            kjs = jnp.arange(nk)
+        else:
+            # last w_blocks ending at this q chunk's block (static length)
+            end = (q_offset // kv_chunk) + (qi * q_chunk) // kv_chunk
+            kjs = end - jnp.arange(w_blocks)[::-1]
+        (m, l, acc), _ = mscan(kv_body, (m0, l0, a0), kjs)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]          # (B,KV,G,qc,hd)
+        return None, out.transpose(0, 3, 1, 2, 4)             # (B,qc,KV,G,hd)
+
+    _, outs = mscan(q_body, None, jnp.arange(nq))             # (nq,B,qc,KV,G,vd)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, vd)
+    return out[:, :Sq0].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA layer
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    rope_theta: float
+    qk_norm: bool = False
+    window: Optional[int] = None
+    causal: bool = True
+    norm_eps: float = 1e-6
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+
+
+def gqa_forward(
+    params: dict,
+    x: jax.Array,                     # (B, S, D)
+    spec: AttnSpec,
+    *,
+    positions: jax.Array | None = None,
+    kv_cache: dict | None = None,     # {"k": (B,S_max,KV,hd), "v": ...}
+    pos: jax.Array | None = None,     # decode write offset (scalar)
+    cross_kv: tuple[jax.Array, jax.Array] | None = None,
+) -> tuple[jax.Array, dict | None]:
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    if cross_kv is None:
+        k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    else:
+        k, v = cross_kv
+    if spec.qk_norm:
+        q = rms_norm(q, params["q_norm"], spec.norm_eps)
+        k = rms_norm(k, params["k_norm"], spec.norm_eps) if cross_kv is None else k
+    if positions is None:
+        positions = step_positions(pos, S)
+    if cross_kv is None:  # rope only for self-attention (encoder stand-in too)
+        q = apply_rope(q, positions, spec.rope_theta)
+        k = apply_rope(k, positions, spec.rope_theta)
+    q = constrain(q, ("batch", "seq", "heads", None))
+
+    if kv_cache is not None and pos is not None and S == 1:
+        # ---- decode: write one step, attend against the whole cache -------
+        kc = cache_write(kv_cache["k"], k, pos)
+        vc = cache_write(kv_cache["v"], v, pos)
+        out = decode_attn(q, kc, vc, pos, window=spec.window)
+        new_cache = {"k": kc, "v": vc}
+    elif kv_cache is not None and pos is not None:
+        # ---- prefill: fill cache, blockwise self-attention ---------------
+        kc = cache_write(kv_cache["k"], k, pos)
+        vc = cache_write(kv_cache["v"], v, pos)
+        out = blockwise_attn(q, k, v, causal=spec.causal, window=spec.window,
+                             q_chunk=spec.q_chunk, kv_chunk=spec.kv_chunk)
+        new_cache = {"k": kc, "v": vc}
+    else:
+        out = blockwise_attn(q, k, v, causal=spec.causal and cross_kv is None,
+                             window=spec.window,
+                             q_chunk=spec.q_chunk, kv_chunk=spec.kv_chunk)
+        new_cache = None
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return constrain(y, ("batch", "seq", "embed")), new_cache
+
+
+def decode_attn(q: jax.Array, kc: jax.Array, vc: jax.Array, pos: jax.Array,
+                *, window: Optional[int] = None) -> jax.Array:
+    """One-token attention against a (possibly seq-sharded) cache.
+
+    q: (B,1,H,hd), kc/vc: (B,S,KV,hd).  The length mask admits positions
+    <= pos; a sliding window additionally drops positions older than
+    ``window``.  Softmax reductions over a kv_seq-sharded cache lower to
+    all-reduces over the data axis (context-parallel decode).
+    """
+    B, S, KV, hd = kc.shape
+    H = q.shape[2]
+    G = H // KV
+    qf = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bskh->bkgs", qf, kc.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    ks = jnp.arange(S)
+    pos = jnp.asarray(pos, jnp.int32)
+    pb = pos if pos.ndim else pos[None]          # (B,) or broadcastable (1,)
+    ok = ks[None, :] <= pb[:, None]
+    if window is not None:
+        ok &= (pb[:, None] - ks[None, :]) < window
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p, vc.astype(jnp.float32))
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLA layer (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def mla_forward(
+    params: dict,
+    x: jax.Array,
+    spec: AttnSpec,
+    kv_lora: int,
+    rope_dim: int,
+    *,
+    kv_cache: dict | None = None,     # {"ckv": (B, S_max, kv_lora + rope_dim)}
+    pos: jax.Array | None = None,
+    norm_eps: float = 1e-6,
+) -> tuple[jax.Array, dict | None]:
+    B, S, _ = x.shape
+    H, hd = spec.n_heads, spec.head_dim
+    ckv = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"])       # (B,S,r+rope)
+    c, k_rope = ckv[..., :kv_lora], ckv[..., kv_lora:]
+    c = rms_norm(c, params["kv_norm"], norm_eps)
+    q_full = jnp.einsum("bsd,dhk->bshk", x, params["wq"])     # (B,S,H,hd+rope)
+    q_nope, q_rope = q_full[..., :hd], q_full[..., hd:]
+    positions = step_positions(pos, S)
+    q_rope = apply_rope(q_rope, positions, spec.rope_theta)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, spec.rope_theta)[:, :, 0, :]
+    ckv_post = jnp.concatenate([c, k_rope], axis=-1).astype(x.dtype)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd + rope_dim, jnp.float32))
+
+    if kv_cache is not None and pos is not None and S == 1:
+        # ---- absorbed decode: scores/context live in the compressed space --
+        cc = cache_write(kv_cache["ckv"], ckv_post, pos)
+        c_cache, kr_cache = cc[..., :kv_lora], cc[..., kv_lora:]
+        q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, params["w_uk"])
+        s = jnp.einsum("bshr,btr->bhst", q_abs.astype(jnp.float32), c_cache.astype(jnp.float32))
+        s += jnp.einsum("bshk,btk->bhst", q_rope.astype(jnp.float32), kr_cache.astype(jnp.float32))
+        s = s * scale
+        posv = jnp.asarray(pos, jnp.int32)
+        pb = posv if posv.ndim else posv[None]
+        ok = jnp.arange(cc.shape[1])[None, :] <= pb[:, None]
+        s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bhst,btr->bshr", p, c_cache.astype(jnp.float32))  # (B,1,H,r)
+        out = jnp.einsum("bshr,rhk->bshk", ctx.astype(x.dtype), params["w_uv"])
+        new_cache = {"ckv": cc}
+    else:
+        # ---- train / prefill: expand K,V then blockwise attention ---------
+        k_nope = jnp.einsum("bsr,rhk->bshk", c, params["w_uk"])
+        vv = jnp.einsum("bsr,rhk->bshk", c, params["w_uv"])
+        kk = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, rope_dim))], axis=-1)
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        # pad v to match packed head_dim so one blockwise call serves both
+        out = blockwise_attn(qq, kk.astype(x.dtype), vv.astype(x.dtype), causal=True,
+                             q_chunk=spec.q_chunk, kv_chunk=spec.kv_chunk)
+        new_cache = None
+        if kv_cache is not None and pos is not None:
+            new_cache = {"ckv": cache_write(kv_cache["ckv"], ckv_post, pos)}
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return constrain(y, ("batch", "seq", "embed")), new_cache

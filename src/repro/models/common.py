@@ -1,0 +1,120 @@
+"""Shared model building blocks: param factory with logical axes, norms, FFN.
+
+Every parameter is created through :class:`Initializer`, which builds two
+parallel pytrees — the arrays and their *logical axis names* — so the
+distribution layer (repro.dist.sharding) can derive NamedShardings without a
+second source of truth.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = dict
+Specs = dict
+
+
+@dataclasses.dataclass
+class Initializer:
+    """Scoped factory producing (params, logical_axis_specs) in lockstep."""
+
+    key: jax.Array
+    dtype: Any = jnp.bfloat16
+    params: Params = dataclasses.field(default_factory=dict)
+    specs: Specs = dataclasses.field(default_factory=dict)
+
+    def _split(self) -> jax.Array:
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def sub(self, name: str) -> "Initializer":
+        child = Initializer(self._split(), self.dtype)
+        self.params[name] = child.params
+        self.specs[name] = child.specs
+        return child
+
+    def weight(
+        self,
+        name: str,
+        shape: tuple[int, ...],
+        axes: tuple[Optional[str], ...],
+        *,
+        scale: float | None = None,
+        init: str = "normal",
+        dtype: Any = None,
+    ) -> None:
+        assert len(shape) == len(axes), (name, shape, axes)
+        dt = dtype or self.dtype
+        if init == "zeros":
+            arr = jnp.zeros(shape, dt)
+        elif init == "ones":
+            arr = jnp.ones(shape, dt)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            s = scale if scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+            arr = (jax.random.normal(self._split(), shape, jnp.float32) * s).astype(dt)
+        self.params[name] = arr
+        self.specs[name] = axes
+
+    def vmap_unit(self, name: str, n: int, build: Callable[["Initializer"], None]) -> None:
+        """Create ``n`` stacked copies of a unit (for lax.scan over layers).
+
+        The build function sees a scoped Initializer; resulting arrays gain a
+        leading ``layers`` axis (never sharded — scanned over).
+        """
+        keys = jax.random.split(self._split(), n)
+
+        def one(k):
+            it = Initializer(k, self.dtype)
+            build(it)
+            return it.params
+
+        stacked = jax.vmap(one)(keys)
+        probe = Initializer(jax.random.PRNGKey(0), self.dtype)
+        build(probe)
+        self.params[name] = stacked
+        self.specs[name] = jax.tree.map(
+            lambda axes: ("layers",) + tuple(axes),
+            probe.specs,
+            is_leaf=lambda x: isinstance(x, tuple),
+        )
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma
+
+
+def init_ffn(it: Initializer, d_model: int, d_ff: int, ffn_type: str) -> None:
+    if ffn_type == "swiglu":
+        it.weight("wi", (d_model, d_ff), ("embed", "ffn"))
+        it.weight("wg", (d_model, d_ff), ("embed", "ffn"))
+    else:  # gelu (classic 2-matrix MLP)
+        it.weight("wi", (d_model, d_ff), ("embed", "ffn"))
+    it.weight("wo", (d_ff, d_model), ("ffn", "embed"))
+
+
+def ffn(params: Params, x: jax.Array, ffn_type: str) -> jax.Array:
+    if ffn_type == "swiglu":
+        h = jax.nn.silu(x @ params["wg"]) * (x @ params["wi"])
+    else:
+        h = jax.nn.gelu(x @ params["wi"])
+    return h @ params["wo"]
+
+
+def constrain(x: jax.Array, logical_axes: tuple) -> jax.Array:
+    """Apply a sharding constraint when inside a mesh context; no-op otherwise."""
+    from jax.sharding import NamedSharding
+
+    from repro.dist.sharding import constraints_enabled, current_mesh, resolve_spec
+
+    mesh = current_mesh()
+    if mesh is None or not constraints_enabled():
+        return x
+    resolved = resolve_spec(logical_axes, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, resolved))

@@ -1,0 +1,91 @@
+"""Token embedding with IRU-accelerated lookup (paper §4.1 patterns).
+
+Forward: a row gather over the vocab table — an irregular access whose index
+stream (token ids) has heavy duplication and no block locality.  With
+``iru=True`` the stream is block-binned first (the BFS pattern, Fig. 8): on
+TPU the sorted stream lets the block-reuse gather kernel service each HBM
+block once (kernels/coalesced_gather).
+
+Backward: scatter-add of per-token gradients with many duplicate destinations
+— exactly the PageRank ``atomicAdd`` pattern (Fig. 10).  The IRU path
+pre-merges duplicate token ids with fp-add (segment merge on the sorted
+stream) so each unique vocab row receives a single update.
+
+Note on the roofline: HLO cost analysis prices a gather by shape, so the
+*locality* win of binning is a run-time effect invisible to §Roofline; the
+merge win (fewer scatter updates) and the MoE dispatch win are structural and
+visible.  Both paths are numerically identical (tests/test_models.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import filter as filt
+from repro.models.common import Initializer, constrain
+
+
+def init_embedding(it: Initializer, vocab: int, d_model: int) -> None:
+    it.weight("tok", (vocab, d_model), ("vocab", "embed"), scale=1.0)
+
+
+def _sorted_gather(table: jax.Array, flat: jax.Array) -> jax.Array:
+    """Gather in block-binned order, then undo the permutation."""
+    order = jnp.argsort(flat, stable=True)          # the IRU reorder (sort engine)
+    rows = jnp.take(table, flat[order], axis=0)     # binned irregular access
+    inv = jnp.argsort(order, stable=True)
+    return jnp.take(rows, inv, axis=0)
+
+
+def _merged_scatter_add(vocab: int, flat: jax.Array, g: jax.Array) -> jax.Array:
+    """Duplicate-merged gradient scatter (PageRank pattern, Fig. 10)."""
+    order = jnp.argsort(flat, stable=True)
+    sidx = flat[order]
+    sval = jnp.take(g, order, axis=0)
+    segs = filt.segment_ids(sidx)
+    merged = jax.ops.segment_sum(sval, segs, num_segments=sidx.shape[0])
+    merged_lane = jnp.take(merged, segs, axis=0)   # run total at every lane
+    first = filt.run_starts(sidx)
+    # one update per unique id (the run's first lane); others are dropped
+    dest = jnp.where(first, sidx, vocab)
+    out = jnp.zeros((vocab, g.shape[-1]), g.dtype)
+    return out.at[dest].add(merged_lane, mode="drop")
+
+
+@jax.custom_vjp
+def _iru_embed(table: jax.Array, flat_tokens: jax.Array) -> jax.Array:
+    return _sorted_gather(table, flat_tokens)
+
+
+def _iru_embed_fwd(table, flat_tokens):
+    return _sorted_gather(table, flat_tokens), (flat_tokens, table.shape[0])
+
+
+def _iru_embed_bwd(res, g):
+    flat_tokens, vocab = res
+    return _merged_scatter_add(vocab, flat_tokens, g), None
+
+
+_iru_embed.defvjp(_iru_embed_fwd, _iru_embed_bwd)
+
+
+def embed(params: dict, tokens: jax.Array, *, iru: bool = True, scale: float | None = None) -> jax.Array:
+    """tokens int32[..., S] -> embeddings [..., S, D]."""
+    table = params["tok"]
+    shape = tokens.shape
+    flat = tokens.reshape(-1).astype(jnp.int32)
+    if iru:
+        rows = _iru_embed(table, flat)
+    else:
+        rows = jnp.take(table, flat, axis=0)
+    out = rows.reshape(*shape, table.shape[-1])
+    if scale is not None:
+        out = out * jnp.asarray(scale, out.dtype)
+    return constrain(out, ("batch", "seq", "embed"))
+
+
+def logits(params: dict, x: jax.Array, head: jax.Array | None = None) -> jax.Array:
+    """Project hidden states to (padded) vocab logits; tied when head is None."""
+    w = params["tok"].T if head is None else head
+    out = jnp.einsum("bsd,dv->bsv", x, w).astype(jnp.float32)
+    return constrain(out, ("batch", "seq", "vocab"))

@@ -1,0 +1,191 @@
+"""Mamba-2 block (state-space duality, arXiv:2405.21060), chunked SSD scan.
+
+Attention-free sequence mixer used by mamba2-130m and the Jamba hybrid.  The
+IRU technique is inapplicable to the recurrence itself (noted in DESIGN.md
+§Arch-applicability): the SSD scan is a *regular* computation — its memory
+accesses are dense and sequential, there is no index stream to reorder.
+
+Train/prefill: the chunked SSD algorithm — O(S·L) within-chunk quadratic work
+plus an O(S/L) inter-chunk state recurrence (lax.scan carrying the
+(heads, head_dim, state) tensor).  Decode: single-step SSM state update.
+
+Layout: single B/C group (n_groups=1, as in the released 130m config).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MambaConfig
+from repro.models.common import Initializer, constrain, rms_norm
+from repro.models.measure import mscan
+
+
+def init_mamba(it: Initializer, d_model: int, mc: MambaConfig) -> None:
+    d_in = mc.d_inner(d_model)
+    nh = mc.n_heads(d_model)
+    conv_dim = d_in + 2 * mc.d_state
+    it.weight("wz", (d_model, d_in), ("embed", "ffn"))
+    it.weight("wx", (d_model, d_in), ("embed", "ffn"))
+    it.weight("wbc", (d_model, 2 * mc.d_state), ("embed", None))
+    it.weight("wdt", (d_model, nh), ("embed", "ssm_heads"))
+    it.weight("conv_w", (mc.d_conv, conv_dim), (None, "ffn"))
+    it.weight("conv_b", (conv_dim,), ("ffn",), init="zeros")
+    it.weight("a_log", (nh,), ("ssm_heads",), init="ones")
+    it.weight("d_skip", (nh,), ("ssm_heads",), init="ones")
+    it.weight("dt_bias", (nh,), ("ssm_heads",), init="zeros")
+    it.weight("out_norm", (d_in,), ("ffn",), init="ones")
+    it.weight("wout", (d_in, d_model), ("ffn", "embed"))
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv, width K.  xbc: (B, S, C); state: (B, K-1, C)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], K - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(full[:, i : i + xbc.shape[1]] * w[i] for i in range(K))
+    new_state = full[:, -(K - 1):] if K > 1 else pad
+    return jax.nn.silu(out + b), new_state
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """Lower-triangular pairwise cumulative sums: out[..., i, j] = sum_{j<k<=i} x[k]."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, bmat: jax.Array,
+             cmat: jax.Array, chunk: int, h0: jax.Array | None = None,
+             ssd_dtype: str = "f32"):
+    """Chunked SSD. x: (B,S,nh,hd), dt: (B,S,nh) (post-softplus), a: (nh,)
+    bmat/cmat: (B,S,N).  Returns (y (B,S,nh,hd), h_final (B,nh,hd,N))."""
+    B, S0, nh, hd = x.shape
+    N = bmat.shape[-1]
+    L = min(chunk, S0)
+    pad = (-S0) % L
+    if pad:
+        # zero-pad tail: dt=0 -> decay exp(0)=1 and update dt*B*x = 0, so the
+        # final state is untouched; padded outputs are sliced off below.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    S = S0 + pad
+    nc = S // L
+    dA = (dt * (-jnp.exp(a.astype(jnp.float32)))).astype(jnp.float32)  # (B,S,nh)
+
+    xc = x.reshape(B, nc, L, nh, hd)
+    dtc = dt.reshape(B, nc, L, nh)
+    dAc = dA.reshape(B, nc, L, nh).transpose(0, 1, 3, 2)       # (B,nc,nh,L)
+    bc = bmat.reshape(B, nc, L, N)
+    cc = cmat.reshape(B, nc, L, N)
+
+    # --- intra-chunk (quadratic within L) -------------------------------
+    # ed: einsum dtype.  The decay factors (exp/cumsum) stay f32; the large
+    # 5-D attention/state tensors may run bf16 (MambaConfig.ssd_dtype).
+    ed = jnp.float32 if ssd_dtype == "f32" else jnp.bfloat16
+    Lmat = jnp.exp(_segsum(dAc)).astype(ed)                    # (B,nc,nh,L,L)
+    att = jnp.einsum("bcln,bcsn->bcls", cc.astype(ed), bc.astype(ed))[:, :, None] * Lmat
+    att = att * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :].astype(ed)  # weight by dt[j]
+    y_diag = jnp.einsum("bchls,bcshd->bclhd", att, xc.astype(ed)).astype(jnp.float32)
+
+    # --- chunk states ----------------------------------------------------
+    cum = jnp.cumsum(dAc, axis=-1)                             # (B,nc,nh,L)
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)                # (B,nc,nh,L)
+    ws = (dtc.transpose(0, 1, 3, 2) * decay_to_end).astype(ed) # (B,nc,nh,L)
+    states = jnp.einsum("bchl,bcln,bclhd->bchdn", ws, bc.astype(ed),
+                        xc.astype(ed)).astype(jnp.float32)
+
+    # --- inter-chunk recurrence ------------------------------------------
+    chunk_decay = jnp.exp(jnp.sum(dAc, axis=-1))               # (B,nc,nh)
+
+    def step(h, inp):
+        st, dec = inp                                          # (B,nh,hd,N), (B,nh)
+        h_new = h * dec[..., None, None] + st
+        return h_new, h
+
+    h_init = jnp.zeros((B, nh, hd, N), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    h_last, h_prev = mscan(
+        step,
+        h_init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                   # (B,nc,nh,hd,N)
+
+    # --- contribution of carried-in state --------------------------------
+    instate_decay = jnp.exp(cum)                               # decay from chunk start
+    y_off = jnp.einsum("bcln,bchdn,bchl->bclhd", cc, h_prev, instate_decay)
+
+    y = (y_diag + y_off).reshape(B, S, nh, hd)
+    return y[:, :S0], h_last
+
+
+def mamba_forward(
+    params: dict,
+    x: jax.Array,                    # (B, S, D)
+    mc: MambaConfig,
+    d_model: int,
+    *,
+    state: dict | None = None,       # {"conv": (B,K-1,C), "ssm": (B,nh,hd,N)}
+    norm_eps: float = 1e-6,
+) -> tuple[jax.Array, dict | None]:
+    B, S, _ = x.shape
+    d_in = mc.d_inner(d_model)
+    nh = mc.n_heads(d_model)
+    z = x @ params["wz"]
+    xr = x @ params["wx"]
+    bcr = x @ params["wbc"]
+    dt_raw = x @ params["wdt"]
+    xbc = jnp.concatenate([xr, bcr], axis=-1)
+
+    conv_state = None if state is None else state["conv"]
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"], conv_state)
+    xr, bmat, cmat = jnp.split(xbc, [d_in, d_in + mc.d_state], axis=-1)
+    xr = constrain(xr, ("batch", "seq", "ffn"))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+
+    xh = xr.reshape(B, S, nh, mc.head_dim)
+    if state is not None and S == 1:
+        # ---- decode: one recurrent step ---------------------------------
+        a = -jnp.exp(params["a_log"].astype(jnp.float32))
+        dA = jnp.exp(dt[:, 0] * a)                             # (B,nh)
+        h = state["ssm"].astype(jnp.float32)
+        upd = jnp.einsum("bh,bn,bhd->bhdn", dt[:, 0], bmat[:, 0].astype(jnp.float32),
+                         xh[:, 0].astype(jnp.float32))
+        h = h * dA[..., None, None] + upd
+        y = jnp.einsum("bn,bhdn->bhd", cmat[:, 0].astype(jnp.float32), h)
+        y = y[:, None]                                         # (B,1,nh,hd)
+        new_state = {"conv": new_conv, "ssm": h.astype(state["ssm"].dtype)}
+    else:
+        h0 = None if state is None else state["ssm"]
+        y, h_last = ssd_scan(xh, dt, params["a_log"], bmat, cmat, mc.chunk, h0,
+                             ssd_dtype=mc.ssd_dtype)
+        new_state = None
+        if state is not None:
+            new_state = {"conv": new_conv, "ssm": h_last.astype(state["ssm"].dtype)}
+    y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    # re-pin shardings after the (nh, hd) <-> d_in reshapes; without these the
+    # SPMD partitioner falls into involuntary full rematerialization
+    y = constrain(y, ("batch", "seq", "ffn"))
+    z = constrain(z, ("batch", "seq", "ffn"))
+    y = rms_norm(y * jax.nn.silu(z), params["out_norm"], norm_eps)
+    out = y @ params["wout"]
+    return constrain(out, ("batch", "seq", "embed")), new_state
+
+
+def init_mamba_state(cfg_d_model: int, mc: MambaConfig, batch: int, dtype) -> dict:
+    d_in = mc.d_inner(cfg_d_model)
+    nh = mc.n_heads(cfg_d_model)
+    conv_dim = d_in + 2 * mc.d_state
+    return {
+        "conv": jnp.zeros((batch, mc.d_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, nh, mc.head_dim, mc.d_state), dtype),
+    }

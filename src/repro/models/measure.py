@@ -1,0 +1,37 @@
+"""Measurement mode: force full scan unrolling during dry-run lowering.
+
+XLA's HloCostAnalysis counts a while-loop body once (trip count is not part
+of the cost model), so any ``lax.scan`` — layer stacks, attention chunk
+loops, SSD chunk recurrences, microbatch accumulation — is invisible to the
+roofline beyond its first iteration.  The dry-run therefore traces under
+``measure_mode()``, which makes every ``mscan`` call site fully unroll.
+Variants are lowered at 1-2 layer-units, so the unrolled HLO stays small;
+production execution keeps the rolled scan (compile time, code size).
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+_MEASURE = [False]
+
+
+def measuring() -> bool:
+    return _MEASURE[0]
+
+
+@contextlib.contextmanager
+def measure_mode():
+    prev = _MEASURE[0]
+    _MEASURE[0] = True
+    try:
+        yield
+    finally:
+        _MEASURE[0] = prev
+
+
+def mscan(body, init, xs, length=None):
+    """lax.scan that fully unrolls under measure_mode()."""
+    return jax.lax.scan(body, init, xs, length=length,
+                        unroll=True if _MEASURE[0] else 1)

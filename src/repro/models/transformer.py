@@ -1,0 +1,428 @@
+"""Composable transformer assembly for all assigned architectures.
+
+One code path serves dense / MoE / hybrid / SSM / enc-dec / embeds-frontend
+models.  Layers are grouped into *stages* — maximal runs of a repeating unit —
+and each stage's parameters are stacked on a leading axis and executed with
+``lax.scan`` (keeps the HLO small enough to compile 398B-parameter graphs and
+is the standard production trick).  Heterogeneous prefixes (DeepSeek's first
+dense layer) become their own 1-repeat stage.
+
+Public surface:
+  init_params / abstract_params   — (params, logical-axis specs)
+  forward_train                   — full-sequence causal logits (+ aux loss)
+  init_cache / cache_axes         — decode cache (concrete or abstract)
+  decode_step                     — one-token serve step
+  encode                          — whisper encoder
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.models import embedding
+from repro.models.attention import AttnSpec, gqa_forward, mla_forward
+from repro.models.common import Initializer, constrain, ffn, init_ffn, rms_norm
+from repro.models.mamba2 import init_mamba, init_mamba_state, mamba_forward
+from repro.models.measure import mscan
+from repro.models.moe import init_moe, moe_ffn
+
+
+# ---------------------------------------------------------------------------
+# Stage plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    kind: str                 # "attn" | "mamba"
+    is_moe: bool
+    has_ffn: bool
+    cross: bool = False
+
+
+def _layer_spec(cfg: ModelConfig, i: int, *, cross: bool = False) -> LayerSpec:
+    kind = cfg.layer_kinds()[i]
+    return LayerSpec(
+        kind=kind,
+        is_moe=cfg.is_moe_layer(i),
+        has_ffn=cfg.d_ff > 0 or cfg.is_moe_layer(i),
+        cross=cross,
+    )
+
+
+def stage_plan(cfg: ModelConfig) -> list[tuple[int, tuple[LayerSpec, ...]]]:
+    """[(repeat, unit-specs)] covering the decoder stack."""
+    cross = cfg.encoder_layers > 0
+    lead = cfg.moe.first_dense_layers if cfg.moe else 0
+    stages: list[tuple[int, tuple[LayerSpec, ...]]] = []
+    if lead:
+        stages.append((1, tuple(_layer_spec(cfg, i, cross=cross) for i in range(lead))))
+    unit = cfg.unit_len() if not lead else 1
+    body = cfg.n_layers - lead
+    if unit == 1 and not lead and cfg.moe is None and len(cfg.layer_pattern) == 1:
+        unit = 1
+    assert body % unit == 0, (cfg.name, body, unit)
+    unit_specs = tuple(_layer_spec(cfg, lead + j, cross=cross) for j in range(unit))
+    stages.append((body // unit, unit_specs))
+    return stages
+
+
+def _attn_spec(cfg: ModelConfig, pcfg: ParallelConfig, *, causal: bool = True) -> AttnSpec:
+    return AttnSpec(
+        n_heads=pcfg.padded_heads(cfg.n_heads),
+        n_kv=cfg.n_kv_heads,
+        head_dim=cfg.head_dim,
+        rope_theta=cfg.rope_theta,
+        qk_norm=cfg.qk_norm,
+        window=cfg.attn_window,
+        causal=causal,
+        norm_eps=cfg.norm_eps,
+        q_chunk=pcfg.attn_chunk,
+        kv_chunk=pcfg.attn_chunk,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+def _init_layer(it: Initializer, cfg: ModelConfig, pcfg: ParallelConfig, ls: LayerSpec) -> None:
+    d = cfg.d_model
+    it.weight("ln1", (d,), ("embed",), init="ones")
+    if ls.kind == "attn":
+        sub = it.sub("attn")
+        h_pad = pcfg.padded_heads(cfg.n_heads)
+        if cfg.attention == "mla":
+            from repro.models.attention import init_mla
+
+            init_mla(sub, d, h_pad, cfg.head_dim, cfg.kv_lora_rank, cfg.qk_rope_dim)
+        else:
+            from repro.models.attention import init_gqa
+
+            init_gqa(sub, d, h_pad, cfg.n_kv_heads, cfg.head_dim, qk_norm=cfg.qk_norm)
+    else:
+        init_mamba(it.sub("mamba"), d, cfg.mamba)
+    if ls.cross:
+        it.weight("ln_x", (d,), ("embed",), init="ones")
+        from repro.models.attention import init_gqa
+
+        init_gqa(it.sub("cross"), d, pcfg.padded_heads(cfg.n_heads), cfg.n_kv_heads,
+                 cfg.head_dim, qk_norm=False)
+    if ls.has_ffn:
+        it.weight("ln2", (d,), ("embed",), init="ones")
+        if ls.is_moe:
+            init_moe(it.sub("moe"), d, cfg.moe, cfg.ffn_type)
+        else:
+            init_ffn(it.sub("ffn"), d, cfg.d_ff, cfg.ffn_type)
+
+
+def _init_unit(it: Initializer, cfg: ModelConfig, pcfg: ParallelConfig,
+               specs: tuple[LayerSpec, ...]) -> None:
+    for j, ls in enumerate(specs):
+        _init_layer(it.sub(f"l{j}"), cfg, pcfg, ls)
+
+
+def init_params(cfg: ModelConfig, pcfg: ParallelConfig, key: jax.Array):
+    """Returns (params, logical-axis specs) pytrees in lockstep."""
+    it = Initializer(key, cfg.dtype)
+    vocab = pcfg.padded_vocab(cfg.vocab_size)
+    from repro.models.embedding import init_embedding
+
+    init_embedding(it.sub("embed"), vocab, cfg.d_model)
+    if cfg.encoder_layers:
+        enc = it.sub("enc")
+        enc_specs = tuple(
+            LayerSpec(kind="attn", is_moe=False, has_ffn=True) for _ in range(1)
+        )
+        enc.vmap_unit(
+            "stage0",
+            cfg.encoder_layers,
+            lambda e: _init_unit(e, dataclasses.replace(cfg), pcfg, enc_specs),
+        )
+        enc.weight("norm", (cfg.d_model,), ("embed",), init="ones")
+    dec = it.sub("dec")
+    for si, (rep, specs) in enumerate(stage_plan(cfg)):
+        dec.vmap_unit(f"stage{si}", rep, functools.partial(_init_unit, cfg=cfg, pcfg=pcfg, specs=specs))
+    it.weight("norm", (cfg.d_model,), ("embed",), init="ones")
+    if not cfg.tie_embeddings:
+        it.weight("head", (cfg.d_model, vocab), ("embed", "vocab"))
+    return it.params, it.specs
+
+
+def abstract_params(cfg: ModelConfig, pcfg: ParallelConfig):
+    """(ShapeDtypeStruct tree, logical-axis spec tree) without allocation."""
+    holder: dict[str, Any] = {}
+
+    def build(key):
+        params, specs = init_params(cfg, pcfg, key)
+        holder["specs"] = specs
+        return params
+
+    shapes = jax.eval_shape(build, jax.random.PRNGKey(0))
+    return shapes, holder["specs"]
+
+
+# ---------------------------------------------------------------------------
+# Layer / stage execution
+# ---------------------------------------------------------------------------
+
+def _run_layer(p: dict, x: jax.Array, ls: LayerSpec, cfg: ModelConfig,
+               pcfg: ParallelConfig, *, cache: dict | None, pos, enc_out):
+    aux = jnp.float32(0.0)
+    new_cache: dict = {}
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if ls.kind == "attn":
+        spec = _attn_spec(cfg, pcfg)
+        if cfg.attention == "mla":
+            y, ac = mla_forward(p["attn"], h, spec, cfg.kv_lora_rank, cfg.qk_rope_dim,
+                                kv_cache=None if cache is None else cache.get("attn"),
+                                pos=pos, norm_eps=cfg.norm_eps)
+        else:
+            y, ac = gqa_forward(p["attn"], h, spec,
+                                kv_cache=None if cache is None else cache.get("attn"),
+                                pos=pos)
+        if ac is not None:
+            new_cache["attn"] = ac
+    else:
+        y, ms = mamba_forward(p["mamba"], h, cfg.mamba, cfg.d_model,
+                              state=None if cache is None else cache.get("mamba"),
+                              norm_eps=cfg.norm_eps)
+        if ms is not None:
+            new_cache["mamba"] = ms
+    x = x + y
+    if ls.cross:
+        h = rms_norm(x, p["ln_x"], cfg.norm_eps)
+        if enc_out is not None:
+            # train / prefill: project encoder output fresh (and cache it)
+            ck = jnp.einsum("bfd,dhk->bfhk", enc_out, p["cross"]["wk"])
+            cv = jnp.einsum("bfd,dhk->bfhk", enc_out, p["cross"]["wv"])
+            ckv = (ck, cv)
+            if cache is not None:
+                new_cache["cross"] = {"ck": ck.astype(cfg.dtype), "cv": cv.astype(cfg.dtype)}
+        else:
+            ckv = (cache["cross"]["ck"], cache["cross"]["cv"])
+            new_cache["cross"] = cache["cross"]
+        y, _ = gqa_forward(p["cross"], h, _attn_spec(cfg, pcfg, causal=False),
+                           cross_kv=ckv)
+        x = x + y
+    if ls.has_ffn:
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if ls.is_moe:
+            y, a = moe_ffn(p["moe"], h, cfg.moe, cfg.ffn_type)
+            aux = aux + a
+        else:
+            y = ffn(p["ffn"], h, cfg.ffn_type)
+        x = x + y
+    return constrain(x, ("batch", "seq", "embed")), new_cache, aux
+
+
+def _run_stage(stacked: dict, x: jax.Array, specs: tuple[LayerSpec, ...],
+               cfg: ModelConfig, pcfg: ParallelConfig, *,
+               caches=None, pos=None, enc_out=None, remat: bool = False):
+    """Scan a stacked stage. Returns (x, new_caches_stacked, aux_sum)."""
+
+    def unit_body(carry, inputs):
+        xx = carry
+        p, c = inputs
+        aux = jnp.float32(0.0)
+        ncs = []
+        for j, ls in enumerate(specs):
+            xx, nc, a = _run_layer(p[f"l{j}"], xx, ls, cfg, pcfg,
+                                   cache=None if c is None else c[j],
+                                   pos=pos, enc_out=enc_out)
+            ncs.append(nc)
+            aux = aux + a
+        return xx, (tuple(ncs), aux)
+
+    body = unit_body
+    if remat and pcfg.remat != "none":
+        body = jax.checkpoint(unit_body, prevent_cse=False)
+
+    n_rep = jax.tree.leaves(stacked)[0].shape[0]
+    cache_xs = caches if caches is not None else None
+    x, (new_caches, auxs) = mscan(body, x, (stacked, cache_xs), length=n_rep)
+    return x, new_caches, jnp.sum(auxs)
+
+
+# ---------------------------------------------------------------------------
+# Embedding of model inputs (token / embeds / vlm frontends)
+# ---------------------------------------------------------------------------
+
+N_PATCHES = 576  # llava-next anyres stub: one base 24x24 grid of patch embeds
+
+
+def _embed_inputs(params: dict, cfg: ModelConfig, batch: dict) -> jax.Array:
+    iru = cfg.iru_embedding
+    if cfg.family == "vlm":
+        tok = embedding.embed(params["embed"], batch["tokens"], iru=iru)
+        x = jnp.concatenate([batch["patches"].astype(tok.dtype), tok], axis=1)
+    elif cfg.frontend == "embeds" and "embeds" in batch:
+        x = batch["embeds"]
+    else:
+        x = embedding.embed(params["embed"], batch["tokens"], iru=iru)
+    return constrain(x, ("batch", "seq", "embed"))
+
+
+# ---------------------------------------------------------------------------
+# Whisper encoder
+# ---------------------------------------------------------------------------
+
+def encode(params: dict, cfg: ModelConfig, pcfg: ParallelConfig, frames: jax.Array,
+           *, remat: bool = False) -> jax.Array:
+    """frames: (B, F, D) precomputed frame embeddings (conv frontend stub)."""
+    enc_cfg = dataclasses.replace(cfg, attn_window=None)
+    spec = LayerSpec(kind="attn", is_moe=False, has_ffn=True)
+
+    def unit_body(carry, p):
+        xx = carry
+        h = rms_norm(xx, p["l0"]["ln1"], cfg.norm_eps)
+        y, _ = gqa_forward(p["l0"]["attn"], h, _attn_spec(enc_cfg, pcfg, causal=False))
+        xx = xx + y
+        h = rms_norm(xx, p["l0"]["ln2"], cfg.norm_eps)
+        xx = xx + ffn(p["l0"]["ffn"], h, cfg.ffn_type)
+        return xx, None
+
+    body = jax.checkpoint(unit_body, prevent_cse=False) if remat else unit_body
+    x, _ = mscan(body, frames, params["enc"]["stage0"])
+    return rms_norm(x, params["enc"]["norm"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Training forward
+# ---------------------------------------------------------------------------
+
+def forward_train(params: dict, cfg: ModelConfig, pcfg: ParallelConfig,
+                  batch: dict) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence causal logits. Returns (logits fp32, aux_loss)."""
+    x = _embed_inputs(params, cfg, batch)
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = encode(params, cfg, pcfg, batch["frames"], remat=pcfg.remat == "full")
+    aux = jnp.float32(0.0)
+    for si, (rep, specs) in enumerate(stage_plan(cfg)):
+        x, _, a = _run_stage(params["dec"][f"stage{si}"], x, specs, cfg, pcfg,
+                             enc_out=enc_out, remat=pcfg.remat == "full")
+        aux = aux + a
+    x = rms_norm(x, params["norm"], cfg.norm_eps)
+    lg = embedding.logits(params["embed"], x, params.get("head"))
+    return lg, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode cache
+# ---------------------------------------------------------------------------
+
+def _layer_cache(cfg: ModelConfig, pcfg: ParallelConfig, ls: LayerSpec,
+                 batch: int, max_seq: int):
+    """Returns (zeros-builder leaves, axes) for one layer."""
+    dt = cfg.dtype
+    c: dict = {}
+    a: dict = {}
+    if ls.kind == "attn":
+        if cfg.attention == "mla":
+            c["attn"] = {"ckv": ((batch, max_seq, cfg.kv_lora_rank + cfg.qk_rope_dim), dt)}
+            a["attn"] = {"ckv": ("batch", "kv_seq", None)}
+        else:
+            kv = (batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+            c["attn"] = {"k": (kv, dt), "v": (kv, dt)}
+            a["attn"] = {"k": ("batch", "kv_seq", "kv_heads", None),
+                         "v": ("batch", "kv_seq", "kv_heads", None)}
+    else:
+        mc = cfg.mamba
+        d_in = mc.d_inner(cfg.d_model)
+        nh = mc.n_heads(cfg.d_model)
+        c["mamba"] = {
+            "conv": ((batch, mc.d_conv - 1, d_in + 2 * mc.d_state), dt),
+            "ssm": ((batch, nh, mc.head_dim, mc.d_state), jnp.float32),
+        }
+        a["mamba"] = {"conv": ("batch", None, "ffn"),
+                      "ssm": ("batch", "ssm_heads", None, "state")}
+    if ls.cross:
+        kvf = (batch, cfg.encoder_frames, cfg.n_kv_heads, cfg.head_dim)
+        c["cross"] = {"ck": (kvf, dt), "cv": (kvf, dt)}
+        a["cross"] = {"ck": ("batch", "frames", "kv_heads", None),
+                      "cv": ("batch", "frames", "kv_heads", None)}
+    return c, a
+
+
+def cache_struct(cfg: ModelConfig, pcfg: ParallelConfig, batch: int, max_seq: int):
+    """((shape,dtype) tree, logical-axes tree), stacked per stage."""
+    shapes, axes = [], []
+    for rep, specs in stage_plan(cfg):
+        cs, as_ = [], []
+        for j, ls in enumerate(specs):
+            c, a = _layer_cache(cfg, pcfg, ls, batch, max_seq)
+            cs.append(c)
+            as_.append(a)
+        # add leading stage axis
+        stacked_c = jax.tree.map(lambda sd: ((rep,) + sd[0], sd[1]), tuple(cs),
+                                 is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+                                 and isinstance(x[0], tuple))
+        stacked_a = jax.tree.map(lambda ax: (None,) + ax, tuple(as_),
+                                 is_leaf=lambda x: isinstance(x, tuple) and all(
+                                     isinstance(e, (str, type(None))) for e in x))
+        shapes.append(stacked_c)
+        axes.append(stacked_a)
+    return shapes, axes
+
+
+def init_cache(cfg: ModelConfig, pcfg: ParallelConfig, batch: int, max_seq: int,
+               *, abstract: bool = False):
+    shapes, _ = cache_struct(cfg, pcfg, batch, max_seq)
+
+    def build(sd):
+        shape, dt = sd
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dt)
+        return jnp.zeros(shape, dt)
+
+    return jax.tree.map(build, shapes,
+                        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+                        and isinstance(x[0], tuple))
+
+
+def cache_axes(cfg: ModelConfig, pcfg: ParallelConfig):
+    _, axes = cache_struct(cfg, pcfg, 1, 1)
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# Decode step (serve)
+# ---------------------------------------------------------------------------
+
+def decode_step(params: dict, cfg: ModelConfig, pcfg: ParallelConfig,
+                tokens: jax.Array, cache, pos: jax.Array):
+    """One serve step. tokens: (B, 1) int32; pos: scalar int32 (cache length).
+
+    Returns (logits (B, 1, V) fp32, new_cache)."""
+    x = embedding.embed(params["embed"], tokens, iru=False)
+    new_caches = []
+    for si, (rep, specs) in enumerate(stage_plan(cfg)):
+        x, nc, _ = _run_stage(params["dec"][f"stage{si}"], x, specs, cfg, pcfg,
+                              caches=cache[si], pos=pos)
+        new_caches.append(nc)
+    x = rms_norm(x, params["norm"], cfg.norm_eps)
+    lg = embedding.logits(params["embed"], x, params.get("head"))
+    return lg, new_caches
+
+
+def prefill(params: dict, cfg: ModelConfig, pcfg: ParallelConfig,
+            batch: dict, cache):
+    """Process a full prompt, filling the cache. Returns (last-token logits, cache)."""
+    x = _embed_inputs(params, cfg, batch)
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = encode(params, cfg, pcfg, batch["frames"])
+    pos = jnp.int32(0)
+    new_caches = []
+    for si, (rep, specs) in enumerate(stage_plan(cfg)):
+        x, nc, _ = _run_stage(params["dec"][f"stage{si}"], x, specs, cfg, pcfg,
+                              caches=cache[si], pos=pos, enc_out=enc_out)
+        new_caches.append(nc)
+    x = rms_norm(x[:, -1:], params["norm"], cfg.norm_eps)
+    lg = embedding.logits(params["embed"], x, params.get("head"))
+    return lg, new_caches

@@ -1,0 +1,162 @@
+"""AdamW with selectable moment precision (fp32 / bf16 / int8).
+
+At 314B-398B parameters, fp32 Adam moments alone exceed per-chip HBM on the
+production mesh; ``opt_state_dtype="int8"`` stores both moments as int8 with
+per-block fp32 scales (block = last-axis groups of 128), an 8x shrink that
+keeps the update numerically faithful (tests/test_optim.py validates descent
+parity vs fp32 Adam on a quadratic and on the 100M example).
+
+All state trees mirror the param tree, so the sharding layer can apply
+``zero_fragment`` (ZeRO-3-style) specs leaf-by-leaf.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+_BLOCK = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "fp32"   # fp32 | bf16 | int8
+
+
+# ---------------------------------------------------------------------------
+# int8 block quantization
+# ---------------------------------------------------------------------------
+
+def _blocked(x: jax.Array):
+    """Reshape trailing axis into (blocks, _BLOCK), padding if ragged."""
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % _BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, _BLOCK), pad
+
+
+def quantize_i8(x: jax.Array) -> dict:
+    """Signed linear int8 per 128-block (first moment m): q = x / blockmax.
+
+    -> {"q": int8 (blocks, 128), "scale": fp32 (blocks, 1)}; array-only
+    pytree so it passes through jit/sharding (target shape is re-supplied at
+    dequantize time from the matching parameter leaf)."""
+    b, _ = _blocked(x)
+    scale = jnp.max(jnp.abs(b), axis=1, keepdims=True) / 127.0
+    q = jnp.round(b / jnp.maximum(scale, 1e-20)).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32)}
+
+
+def dequantize_i8(s: dict, shape: tuple[int, ...]) -> jax.Array:
+    flat = (s["q"].astype(jnp.float32) * s["scale"]).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+_V_FLOOR = 2.0 ** -60  # well below any useful second moment
+
+
+def quantize_i8_log(x: jax.Array) -> dict:
+    """Log-domain int8 per 128-block, for the NON-NEGATIVE second moment v.
+
+    Linear max-scaled int8 is catastrophic for v: lanes far below the block
+    max quantize to 0 and 1/sqrt(v)+eps explodes the update (observed: loss
+    6.7 -> 649 in four steps).  Quantizing log2(v) instead bounds the
+    *relative* error by (hi-lo)*ln2/255 per block — a few percent on the
+    step size, which Adam tolerates."""
+    b, _ = _blocked(jnp.maximum(x, 0.0))
+    e = jnp.log2(b + _V_FLOOR)
+    lo = jnp.min(e, axis=1, keepdims=True)
+    hi = jnp.max(e, axis=1, keepdims=True)
+    span = jnp.maximum(hi - lo, 1e-6)
+    q = jnp.round((e - lo) / span * 255.0 - 128.0).astype(jnp.int8)
+    return {"q": q, "lo": lo.astype(jnp.float32), "hi": hi.astype(jnp.float32)}
+
+
+def dequantize_i8_log(s: dict, shape: tuple[int, ...]) -> jax.Array:
+    span = jnp.maximum(s["hi"] - s["lo"], 1e-6)
+    e = s["lo"] + (s["q"].astype(jnp.float32) + 128.0) / 255.0 * span
+    flat = (jnp.exp2(e) - _V_FLOOR).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return jnp.maximum(flat[:n].reshape(shape), 0.0)
+
+
+def _encode(x: jax.Array, dtype: str, *, nonneg: bool = False):
+    if dtype == "fp32":
+        return x.astype(jnp.float32)
+    if dtype == "bf16":
+        return x.astype(jnp.bfloat16)
+    if dtype == "int8":
+        return quantize_i8_log(x) if nonneg else quantize_i8(x)
+    raise ValueError(dtype)
+
+
+def _decode(s: Any, shape: tuple[int, ...]) -> jax.Array:
+    if isinstance(s, dict) and "lo" in s:
+        return dequantize_i8_log(s, shape)
+    if isinstance(s, dict) and "q" in s:
+        return dequantize_i8(s, shape)
+    return jnp.asarray(s, jnp.float32)
+
+
+def _is_moment_leaf(x) -> bool:
+    return isinstance(x, dict) and "q" in x
+
+
+# ---------------------------------------------------------------------------
+# init / update
+# ---------------------------------------------------------------------------
+
+def adamw_init(params, cfg: AdamWConfig):
+    zeros = jax.tree.map(lambda p: _encode(jnp.zeros(p.shape, jnp.float32), cfg.state_dtype), params)
+    zeros2 = jax.tree.map(
+        lambda p: _encode(jnp.zeros(p.shape, jnp.float32), cfg.state_dtype, nonneg=True), params)
+    return {"m": zeros, "v": zeros2, "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig, lr_scale: jax.Array | float = 1.0):
+    """One AdamW step. Returns (new_params, new_state)."""
+    step = state["step"] + 1
+    gn = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-12))
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def leaf(p, g, m_s, v_s):
+        g = g.astype(jnp.float32) * clip
+        m = cfg.b1 * _decode(m_s, p.shape) + (1 - cfg.b1) * g
+        v = cfg.b2 * _decode(v_s, p.shape) + (1 - cfg.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        upd = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+        return new_p, _encode(m, cfg.state_dtype), _encode(v, cfg.state_dtype, nonneg=True)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [leaf(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}

@@ -1,0 +1,131 @@
+"""Batched serving engine: continuous batching over a fixed-shape decode step.
+
+Production inference at scale runs one compiled ``decode_step`` whose batch
+slots are *leased* to requests (continuous batching / slot recycling, the
+vLLM pattern adapted to XLA's static shapes):
+
+* a fixed (B, S_max) cache is allocated once;
+* incoming requests claim a free slot, their prompt is prefilled into that
+  slot's cache lanes (per-slot prefill via the batched prefill step with
+  masking);
+* every engine tick decodes ONE token for ALL active slots (a single
+  fixed-shape XLA call — no recompilation, ever);
+* finished requests (EOS or max_tokens) release their slot immediately; new
+  requests join at the next tick, so short and long generations share a
+  batch without head-of-line blocking.
+
+Per-slot positions make this work: the decode step receives a (B,) position
+vector, so each slot writes its cache at its own offset (gqa/mla decode
+paths accept scalar or per-batch ``pos``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.models import transformer as tfm
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray                   # int32[prompt_len]
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    # filled by the engine
+    rid: int = -1
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    batch_slots: int = 8
+    max_seq: int = 512
+    greedy: bool = True
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, pcfg: ParallelConfig, params,
+                 sc: ServeConfig = ServeConfig()):
+        self.cfg, self.pcfg, self.sc = cfg, pcfg, sc
+        self.params = params
+        B, S = sc.batch_slots, sc.max_seq
+        self.cache = tfm.init_cache(cfg, pcfg, B, S)
+        self.pos = np.zeros(B, np.int32)              # per-slot next position
+        self.active: list[Optional[Request]] = [None] * B
+        self.queue: list[Request] = []
+        self._next_rid = 0
+        self._decode = jax.jit(
+            lambda params, toks, cache, pos: tfm.decode_step(params, cfg, pcfg, toks, cache, pos)
+        )
+        self._prefill_len: dict[int, Callable] = {}
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> int:
+        req.rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(req)
+        return req.rid
+
+    def _step_raw(self, batch_tok: np.ndarray, update_only: Optional[int] = None):
+        pos_dev = jnp.asarray(self.pos)
+        logits, new_cache = self._decode(self.params, jnp.asarray(batch_tok), self.cache, pos_dev)
+        self.cache = new_cache
+        if update_only is None:
+            self.pos[[r is not None for r in self.active]] += 1
+        else:
+            self.pos[update_only] += 1
+        return logits
+
+    # ------------------------------------------------------------------
+    def tick(self) -> int:
+        """Admit queued requests, decode one token for all active slots.
+
+        Returns the number of active requests after the tick."""
+        # admit
+        for slot in range(self.sc.batch_slots):
+            if self.active[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                self.active[slot] = req
+                self.pos[slot] = 0
+                self._admit(slot, req)
+        if not any(r is not None for r in self.active):
+            return 0
+        # one decode tick for everyone
+        batch_tok = np.zeros((self.sc.batch_slots, 1), np.int32)
+        for slot, req in enumerate(self.active):
+            if req is not None:
+                batch_tok[slot, 0] = req.generated[-1] if req.generated else req.prompt[-1]
+        logits = self._step_raw(batch_tok)
+        nxt = np.asarray(jnp.argmax(logits[:, 0, : self.cfg.vocab_size], axis=-1))
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            tok = int(nxt[slot])
+            req.generated.append(tok)
+            if (req.eos_id is not None and tok == req.eos_id) or \
+                    len(req.generated) >= req.max_new_tokens or \
+                    self.pos[slot] >= self.sc.max_seq - 1:
+                req.done = True
+                self.active[slot] = None       # slot recycled next tick
+        return sum(r is not None for r in self.active)
+
+    def _admit(self, slot: int, req: Request) -> None:
+        """Write the prompt into the slot's cache (token-by-token replay)."""
+        toks = np.asarray(req.prompt, np.int32)
+        for t in toks[:-1]:
+            batch_tok = np.zeros((self.sc.batch_slots, 1), np.int32)
+            batch_tok[slot, 0] = int(t)
+            pos_dev = jnp.asarray(self.pos)
+            _, self.cache = self._decode(self.params, jnp.asarray(batch_tok), self.cache, pos_dev)
+            self.pos[slot] += 1
+
+    def run_to_completion(self, max_ticks: int = 10_000) -> None:
+        for _ in range(max_ticks):
+            if self.tick() == 0 and not self.queue:
+                break

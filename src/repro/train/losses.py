@@ -1,0 +1,24 @@
+"""Losses: causal LM cross-entropy with z-loss, computed in fp32."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array, *, z_loss: float = 1e-4,
+                 vocab_real: int | None = None):
+    """logits (B,S,Vpad) fp32, labels (B,S) int32. Returns scalar mean loss.
+
+    ``vocab_real`` masks padded vocab columns out of the softmax.
+    """
+    lg = logits.astype(jnp.float32)
+    if vocab_real is not None and vocab_real < lg.shape[-1]:
+        neg = jnp.full((lg.shape[-1] - vocab_real,), -1e30, jnp.float32)
+        lg = lg.at[..., vocab_real:].set(neg)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    nll = lse - gold
+    loss = jnp.mean(nll)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(jnp.square(lse))
+    return loss

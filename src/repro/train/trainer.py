@@ -1,0 +1,135 @@
+"""Training step factory: grad-accumulation microbatch scan + AdamW.
+
+The returned ``train_step(state, batch) -> (state, metrics)`` is a single
+jit-able function suitable for ``jax.jit(..., in_shardings=...)`` on the
+production mesh:
+
+* **Microbatching** — the global batch is split into ``pcfg.microbatches``
+  slices scanned sequentially; gradients accumulate in fp32.  Besides memory,
+  this staggers the backward all-reduce of microbatch k with the compute of
+  k+1 (XLA latency hiding via independent dataflow) — the compute/comm
+  overlap feature (DESIGN.md §8).
+* **Remat** — per-unit activation checkpointing inside the layer scan
+  (models.transformer honors ``pcfg.remat``).
+* **Gradient compression** — optional int8 + error feedback on the DP
+  all-reduce path (dist.collectives); off by default.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.models import transformer as tfm
+from repro.models.measure import mscan
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, global_norm
+from repro.optim.schedule import linear_warmup_cosine
+from repro.train.losses import softmax_xent
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    adam: AdamWConfig = AdamWConfig()
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    aux_weight: float = 1e-2     # MoE load-balance loss weight
+    z_loss: float = 1e-4
+    grad_compression: Optional[str] = None   # None | "int8_ef"
+
+
+TrainState = dict  # {"params", "opt", "ef" (optional error-feedback residue)}
+
+
+def init_state(cfg: ModelConfig, pcfg: ParallelConfig, tc: TrainConfig, key) -> TrainState:
+    params, _ = tfm.init_params(cfg, pcfg, key)
+    state: TrainState = {"params": params, "opt": adamw_init(params, tc.adam)}
+    if tc.grad_compression == "int8_ef":
+        state["ef"] = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return state
+
+
+def abstract_state(cfg: ModelConfig, pcfg: ParallelConfig, tc: TrainConfig):
+    """(ShapeDtypeStruct state tree, logical-axes tree) without allocation."""
+    holder: dict[str, Any] = {}
+
+    def build(key):
+        params, specs = tfm.init_params(cfg, pcfg, key)
+        holder["specs"] = specs
+        st: TrainState = {"params": params, "opt": adamw_init(params, tc.adam)}
+        if tc.grad_compression == "int8_ef":
+            st["ef"] = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return st
+
+    shapes = jax.eval_shape(build, jax.random.PRNGKey(0))
+    return shapes, holder["specs"]
+
+
+def _split_batch(batch: dict, n: int) -> dict:
+    """(B, ...) -> (n, B/n, ...) for the microbatch scan."""
+    def f(x):
+        B = x.shape[0]
+        assert B % n == 0, (B, n)
+        return x.reshape(n, B // n, *x.shape[1:])
+
+    return jax.tree.map(f, batch)
+
+
+def make_loss_fn(cfg: ModelConfig, pcfg: ParallelConfig, tc: TrainConfig) -> Callable:
+    def loss_fn(params, mb: dict):
+        logits, aux = tfm.forward_train(params, cfg, pcfg, mb)
+        loss = softmax_xent(logits, mb["labels"], z_loss=tc.z_loss,
+                            vocab_real=cfg.vocab_size)
+        return loss + tc.aux_weight * aux, (loss, aux)
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, pcfg: ParallelConfig, tc: TrainConfig) -> Callable:
+    loss_fn = make_loss_fn(cfg, pcfg, tc)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    n_mb = max(pcfg.microbatches, 1)
+
+    def train_step(state: TrainState, batch: dict):
+        params = state["params"]
+
+        if n_mb == 1:
+            (total, (loss, aux)), grads = grad_fn(params, batch)
+        else:
+            mbs = _split_batch(batch, n_mb)
+
+            def mb_body(carry, mb):
+                acc, lsum, asum = carry
+                (tot, (l, a)), g = grad_fn(params, mb)
+                acc = jax.tree.map(lambda x, y: x + y.astype(jnp.float32), acc, g)
+                return (acc, lsum + l, asum + a), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gacc, lsum, asum), _ = mscan(
+                mb_body, (zeros, jnp.float32(0), jnp.float32(0)), mbs)
+            grads = jax.tree.map(lambda g: g / n_mb, gacc)
+            loss, aux = lsum / n_mb, asum / n_mb
+
+        if tc.grad_compression == "int8_ef":
+            from repro.dist.collectives import compress_grads_int8_ef
+
+            grads, new_ef = compress_grads_int8_ef(grads, state["ef"])
+        # +1: the schedule is evaluated for the step being TAKEN (a 0-indexed
+        # ramp would silently zero the very first update)
+        lr_scale = linear_warmup_cosine(state["opt"]["step"] + 1, tc.warmup_steps, tc.total_steps)
+        new_params, new_opt = adamw_update(params, grads, state["opt"], tc.adam, lr_scale)
+        new_state: TrainState = {"params": new_params, "opt": new_opt}
+        if tc.grad_compression == "int8_ef":
+            new_state["ef"] = new_ef
+        metrics = {
+            "loss": loss,
+            "aux": aux,
+            "grad_norm": global_norm(grads),
+            "lr_scale": lr_scale,
+        }
+        return new_state, metrics
+
+    return train_step

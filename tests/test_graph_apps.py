@@ -1,0 +1,127 @@
+"""Graph app correctness: baseline vs IRU variants vs independent oracles
+(networkx where meaningful), over the Table-3-like synthetic datasets."""
+import networkx as nx
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.apps.bfs import UNVISITED, bfs, bfs_jit
+from repro.apps.pagerank import pagerank, pagerank_jit
+from repro.apps.sssp import sssp
+from repro.core import IRUConfig
+from repro.graphs.csr import CSRGraph, from_edges
+from repro.graphs.generators import DATASETS, make_dataset
+
+
+def small_graph(seed=0, n=200, m=800) -> CSRGraph:
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    w = rng.random(m).astype(np.float32) + 0.05
+    return from_edges(src, dst, n, w, symmetrize=True)
+
+
+def to_nx(g: CSRGraph) -> nx.DiGraph:
+    G = nx.DiGraph()
+    G.add_nodes_from(range(g.n_nodes))
+    src = np.asarray(g.edge_sources())
+    dst = np.asarray(g.col_idx)
+    w = np.asarray(g.weights)
+    G.add_weighted_edges_from(zip(src.tolist(), dst.tolist(), w.tolist()))
+    return G
+
+
+@pytest.fixture(scope="module")
+def g():
+    return small_graph()
+
+
+def test_bfs_matches_networkx(g):
+    labels = bfs(g, source=0)
+    lens = nx.single_source_shortest_path_length(to_nx(g), 0)
+    for v in range(g.n_nodes):
+        expect = lens.get(v, None)
+        got = int(labels[v])
+        assert (got == UNVISITED) == (expect is None)
+        if expect is not None:
+            assert got == expect
+
+
+@pytest.mark.parametrize("mode_cfg", [
+    ("iru", IRUConfig(mode="sort")),
+    ("iru", IRUConfig(mode="hash", num_sets=64, slots=8)),
+])
+def test_bfs_iru_equals_baseline(g, mode_cfg):
+    mode, cfg = mode_cfg
+    base = bfs(g, source=0)
+    got = bfs(g, source=0, mode=mode, iru_config=cfg)
+    np.testing.assert_array_equal(base, got)
+
+
+def test_bfs_jit_matches_host(g):
+    host = bfs(g, source=0)
+    jit = np.asarray(bfs_jit(g, source=0))
+    np.testing.assert_array_equal(host, jit)
+
+
+def test_sssp_matches_networkx(g):
+    dist = sssp(g, source=0)
+    nxd = nx.single_source_dijkstra_path_length(to_nx(g), 0)
+    for v in range(g.n_nodes):
+        if v in nxd:
+            np.testing.assert_allclose(dist[v], nxd[v], rtol=1e-5)
+        else:
+            assert np.isinf(dist[v])
+
+
+@pytest.mark.parametrize("cfg", [IRUConfig(mode="sort", filter_op="min"),
+                                 IRUConfig(mode="hash", filter_op="min", num_sets=64, slots=8)])
+def test_sssp_iru_equals_baseline(g, cfg):
+    base = sssp(g, source=0)
+    got = sssp(g, source=0, mode="iru", iru_config=cfg)
+    np.testing.assert_allclose(base, got, rtol=1e-5)
+
+
+def test_pagerank_matches_networkx(g):
+    pr = pagerank(g, iters=60)
+    nxpr = nx.pagerank(to_nx(g), alpha=0.85, max_iter=200, weight=None)
+    got = pr / pr.sum()
+    expect = np.array([nxpr[v] for v in range(g.n_nodes)])
+    np.testing.assert_allclose(got, expect, atol=2e-4)
+
+
+@pytest.mark.parametrize("cfg", [IRUConfig(mode="sort", filter_op="add")])
+def test_pagerank_iru_equals_baseline(g, cfg):
+    base = pagerank(g, iters=10)
+    got = pagerank(g, iters=10, mode="iru", iru_config=cfg)
+    np.testing.assert_allclose(base, got, rtol=1e-4, atol=1e-7)
+
+
+def test_pagerank_jit_matches_host(g):
+    host = pagerank(g, iters=10)
+    src = g.edge_sources()
+    jit = np.asarray(pagerank_jit(src, g.col_idx, g.degrees(), g.n_nodes,
+                                  iters=10, use_iru=True))
+    np.testing.assert_allclose(host, jit, rtol=1e-4, atol=1e-7)
+
+
+def test_pagerank_jit_iru_equals_dense(g):
+    src = g.edge_sources()
+    a = pagerank_jit(src, g.col_idx, g.degrees(), g.n_nodes, iters=10, use_iru=True)
+    b = pagerank_jit(src, g.col_idx, g.degrees(), g.n_nodes, iters=10, use_iru=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-7)
+
+
+@pytest.mark.parametrize("name", sorted(DATASETS))
+def test_datasets_generate_and_bfs(name):
+    kw = {}
+    # reduced scales for test speed
+    scale = {"ca": dict(scale=24), "cond": dict(n=800), "delaunay": dict(scale=24),
+             "human": dict(n=400), "kron": dict(scale=9), "msdoor": dict(scale=8)}
+    g = make_dataset(name, **scale[name])
+    assert g.n_nodes > 0 and g.n_edges > 0
+    labels = bfs(g, source=0, mode="iru")
+    base = bfs(g, source=0)
+    np.testing.assert_array_equal(labels, base)
+    # degrees consistent
+    assert int(g.degrees().sum()) == g.n_edges

@@ -1,0 +1,121 @@
+"""Property-based tests (hypothesis) for the IRU core invariants."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    IRUConfig,
+    accesses_per_group,
+    coalescing_improvement,
+    compact,
+    filter_rate,
+    iru_reorder,
+    iru_scatter_add,
+    iru_scatter_min,
+    merge_sorted,
+    total_accesses,
+)
+
+idx_arrays = st.lists(st.integers(0, 2000), min_size=1, max_size=400).map(
+    lambda xs: np.asarray(xs, np.int32))
+
+
+@given(idx_arrays)
+@settings(max_examples=40, deadline=None)
+def test_reorder_is_permutation(idx):
+    s = iru_reorder(jnp.asarray(idx))
+    np.testing.assert_array_equal(np.sort(np.asarray(s.positions)), np.arange(len(idx)))
+    np.testing.assert_array_equal(idx[np.asarray(s.positions)], np.asarray(s.indices))
+    assert bool(np.all(np.asarray(s.active)))
+
+
+@given(idx_arrays)
+@settings(max_examples=40, deadline=None)
+def test_reorder_never_hurts_coalescing(idx):
+    """Sort-engine reorder: accesses(reordered) <= accesses(original)."""
+    s = iru_reorder(jnp.asarray(idx))
+    base = int(total_accesses(jnp.asarray(idx)))
+    new = int(total_accesses(s.indices))
+    assert new <= base
+
+
+@given(idx_arrays, st.sampled_from(["add", "min", "max"]))
+@settings(max_examples=30, deadline=None)
+def test_merge_semantics_match_numpy(idx, op):
+    vals = np.arange(len(idx), dtype=np.float32) * 0.5 + 1.0
+    cfg = IRUConfig(filter_op=op, compact=False)
+    s = iru_reorder(jnp.asarray(idx), jnp.asarray(vals), config=cfg)
+    si, sv, sa = np.asarray(s.indices), np.asarray(s.secondary), np.asarray(s.active)
+    # exactly one survivor per unique index
+    assert sorted(si[sa].tolist()) == sorted(set(idx.tolist()))
+    fn = {"add": np.sum, "min": np.min, "max": np.max}[op]
+    for u in set(idx.tolist()):
+        expect = fn(vals[idx == u])
+        got = sv[sa & (si == u)][0]
+        np.testing.assert_allclose(got, expect, rtol=1e-5)
+
+
+@given(idx_arrays)
+@settings(max_examples=30, deadline=None)
+def test_scatter_add_equals_dense(idx):
+    vals = np.random.default_rng(1).random(len(idx)).astype(np.float32)
+    n = int(idx.max()) + 1
+    out = iru_scatter_add(jnp.zeros((n,), jnp.float32), jnp.asarray(idx), jnp.asarray(vals))
+    expect = np.zeros(n, np.float32)
+    np.add.at(expect, idx, vals)
+    np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-4, atol=1e-5)
+
+
+@given(idx_arrays)
+@settings(max_examples=30, deadline=None)
+def test_scatter_min_equals_dense(idx):
+    vals = np.random.default_rng(2).random(len(idx)).astype(np.float32)
+    n = int(idx.max()) + 1
+    tgt = np.full(n, np.inf, np.float32)
+    out = iru_scatter_min(jnp.asarray(tgt), jnp.asarray(idx), jnp.asarray(vals))
+    expect = tgt.copy()
+    np.minimum.at(expect, idx, vals)
+    np.testing.assert_allclose(np.asarray(out), expect)
+
+
+def test_accesses_per_group_counts_blocks():
+    # 32 identical indices -> 1 access; 32 distinct blocks -> 32 accesses
+    same = jnp.zeros((32,), jnp.int32)
+    assert int(total_accesses(same)) == 1
+    spread = jnp.arange(32, dtype=jnp.int32) * 32  # one per 128B block (4B elems)
+    assert int(total_accesses(spread)) == 32
+    # improvement metric
+    assert float(coalescing_improvement(spread, same)) == 32.0
+
+
+def test_accesses_respects_active_mask():
+    idx = jnp.arange(64, dtype=jnp.int32) * 32
+    active = jnp.asarray([True] * 32 + [False] * 32)
+    per = accesses_per_group(idx, active)
+    assert per.tolist() == [32, 0]
+
+
+@given(idx_arrays)
+@settings(max_examples=20, deadline=None)
+def test_compact_moves_survivors_front(idx):
+    cfg = IRUConfig(filter_op="add", compact=True)
+    s = iru_reorder(jnp.asarray(idx), jnp.asarray(np.ones(len(idx), np.float32)), config=cfg)
+    act = np.asarray(s.active)
+    # all survivors strictly before all filtered lanes
+    if act.any() and (~act).any():
+        assert act[: act.sum()].all() and not act[act.sum():].any()
+
+
+def test_filter_rate_matches_duplicate_fraction():
+    idx = jnp.asarray(np.repeat(np.arange(10, dtype=np.int32), 4))  # 40 elems, 10 unique
+    merged, surv = merge_sorted(idx, jnp.ones((40,), jnp.float32), "add")
+    assert float(filter_rate(surv)) == pytest.approx(0.75)
+
+
+def test_hash_mode_roundtrip_through_core_api():
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, 256, 300).astype(np.int32)
+    cfg = IRUConfig(mode="hash", num_sets=32, slots=8)
+    s = iru_reorder(jnp.asarray(idx), config=cfg)
+    np.testing.assert_array_equal(np.sort(np.asarray(s.indices)), np.sort(idx))

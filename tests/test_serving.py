@@ -1,0 +1,72 @@
+"""Serving engine: continuous batching, slot recycling, per-slot positions."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import smoke_config
+from repro.configs.base import ParallelConfig
+from repro.models import transformer as T
+from repro.serve import Request, ServeConfig, ServingEngine
+
+import dataclasses
+
+# fp32: greedy-token comparisons across DIFFERENT batch shapes must not be
+# at the mercy of bf16 accumulation-order drift (observed flaky argmax).
+CFG = dataclasses.replace(smoke_config("qwen3-32b"), dtype=jnp.float32)
+PCFG = ParallelConfig(model_axis=1, remat="none", attn_chunk=32)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return T.init_params(CFG, PCFG, jax.random.PRNGKey(0))[0]
+
+
+def test_more_requests_than_slots_all_complete(params):
+    eng = ServingEngine(CFG, PCFG, params, ServeConfig(batch_slots=3, max_seq=64))
+    reqs = [Request(prompt=np.array([1, 2, 3 + i]), max_new_tokens=4 + i % 3)
+            for i in range(8)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_to_completion()
+    assert all(r.done for r in reqs)
+    for i, r in enumerate(reqs):
+        assert len(r.generated) == 4 + i % 3
+
+
+def test_continuous_batching_matches_isolated_decode(params):
+    """A request decoded alongside others produces the same tokens as alone."""
+    prompt = np.array([5, 9, 2, 7])
+    solo = Request(prompt=prompt.copy(), max_new_tokens=6)
+    eng1 = ServingEngine(CFG, PCFG, params, ServeConfig(batch_slots=1, max_seq=64))
+    eng1.submit(solo)
+    eng1.run_to_completion()
+
+    crowd = [Request(prompt=np.array([1, 2, 3]), max_new_tokens=8) for _ in range(3)]
+    shared = Request(prompt=prompt.copy(), max_new_tokens=6)
+    eng2 = ServingEngine(CFG, PCFG, params, ServeConfig(batch_slots=4, max_seq=64))
+    for r in crowd:
+        eng2.submit(r)
+    eng2.submit(shared)
+    eng2.run_to_completion()
+    assert shared.generated == solo.generated
+
+
+def test_eos_frees_slot_early(params):
+    """EOS ends a request immediately and recycles its slot (same engine,
+    same slot: deterministic by construction)."""
+    eng = ServingEngine(CFG, PCFG, params, ServeConfig(batch_slots=1, max_seq=64))
+    probe = Request(prompt=np.array([1, 2]), max_new_tokens=2)
+    eng.submit(probe)
+    eng.run_to_completion()
+    eos = probe.generated[0]
+    # same engine, slot recycled, identical prompt -> identical first token
+    r2 = Request(prompt=np.array([1, 2]), max_new_tokens=50, eos_id=eos)
+    eng.submit(r2)
+    eng.run_to_completion()
+    assert r2.done and len(r2.generated) == 1
+    # and the slot is free again for a third request
+    r3 = Request(prompt=np.array([3]), max_new_tokens=2)
+    eng.submit(r3)
+    eng.run_to_completion()
+    assert r3.done and len(r3.generated) == 2

@@ -1,0 +1,249 @@
+"""Substrate tests: optimizer, data pipeline, checkpoints, supervisor/faults,
+gradient compression, serving engine."""
+import os
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import smoke_config
+from repro.configs.base import ParallelConfig, ShapeConfig
+from repro.data.pipeline import DataConfig, make_batch, synthetic_stream
+from repro.ckpt import CheckpointManager, latest_step, restore_checkpoint, save_checkpoint
+from repro.dist.collectives import compress_grads_int8_ef
+from repro.ft import FaultInjector, FaultPlan, Supervisor, SupervisorConfig
+from repro.optim.adamw import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    dequantize_i8,
+    dequantize_i8_log,
+    quantize_i8,
+    quantize_i8_log,
+)
+from repro.train.trainer import TrainConfig, init_state, make_train_step
+
+CFG = smoke_config("qwen3-32b")
+PCFG = ParallelConfig(model_axis=1, remat="none", attn_chunk=32)
+SHAPE = ShapeConfig("t", 64, 4, "train")
+
+
+# ---------------------------------------------------------------------------
+# Optimizer
+# ---------------------------------------------------------------------------
+
+def _quadratic_losses(state_dtype, steps=30):
+    target = jnp.asarray(np.random.default_rng(0).standard_normal((64, 64)), jnp.float32)
+    params = {"w": jnp.zeros((64, 64), jnp.float32)}
+    cfg = AdamWConfig(lr=5e-2, weight_decay=0.0, state_dtype=state_dtype)
+    state = adamw_init(params, cfg)
+    losses = []
+    for _ in range(steps):
+        g = {"w": 2 * (params["w"] - target)}
+        losses.append(float(jnp.mean((params["w"] - target) ** 2)))
+        params, state = jax.jit(lambda p, g, s: adamw_update(p, g, s, cfg))(params, g, state)
+    return losses
+
+
+@pytest.mark.parametrize("dtype", ["fp32", "bf16", "int8"])
+def test_adamw_descends_quadratic(dtype):
+    losses = _quadratic_losses(dtype)
+    assert losses[-1] < 0.1 * losses[0], losses[::10]
+
+
+def test_int8_adam_tracks_fp32():
+    a = _quadratic_losses("fp32")
+    b = _quadratic_losses("int8")
+    np.testing.assert_allclose(b[-1], a[-1], rtol=0.5)  # same convergence regime
+
+
+def test_int8_roundtrip_precision():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((300, 7)), jnp.float32)
+    q = quantize_i8(x)
+    back = dequantize_i8(q, x.shape)
+    # linear signed: error bounded by blockmax/127
+    assert float(jnp.max(jnp.abs(back - x))) <= float(jnp.max(jnp.abs(x))) / 127 + 1e-6
+    v = jnp.abs(x) * 10 ** jnp.asarray(rng.uniform(-8, 0, x.shape), jnp.float32)
+    ql = quantize_i8_log(v)
+    backl = dequantize_i8_log(ql, v.shape)
+    rel = jnp.abs(backl - v) / jnp.maximum(v, 1e-20)
+    assert float(jnp.median(rel)) < 0.15  # log-domain: bounded RELATIVE error
+
+
+def test_grad_compression_error_feedback_carries_residue():
+    g = {"w": jnp.asarray([[1.0, 1e-4, -2.0, 3e-5]])}
+    ef = {"w": jnp.zeros((1, 4), jnp.float32)}
+    deq, new_ef = compress_grads_int8_ef(g, ef)
+    # residue + dequantized == original (exactness of the decomposition)
+    np.testing.assert_allclose(np.asarray(deq["w"] + new_ef["w"]),
+                               np.asarray(g["w"]), rtol=1e-6)
+    # over many steps the TRANSMITTED AVERAGE converges to g — small entries
+    # below the quantum (2/127 here) are delivered by the accumulated residue
+    total = jnp.zeros((1, 4), jnp.float32)
+    ef = {"w": jnp.zeros((1, 4), jnp.float32)}
+    n = 400
+    for _ in range(n):
+        deq, ef = compress_grads_int8_ef(g, ef)
+        total = total + deq["w"]
+    np.testing.assert_allclose(np.asarray(total / n), np.asarray(g["w"]),
+                               rtol=0.05, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_pipeline_deterministic_replay():
+    b1 = make_batch(CFG, SHAPE, 7)
+    b2 = make_batch(CFG, SHAPE, 7)
+    for k in b1:
+        np.testing.assert_array_equal(np.asarray(b1[k]), np.asarray(b2[k]))
+    b3 = make_batch(CFG, SHAPE, 8)
+    assert not np.array_equal(np.asarray(b1["tokens"]), np.asarray(b3["tokens"]))
+
+
+def test_stream_resumes_mid_epoch():
+    s1 = synthetic_stream(CFG, SHAPE, 0)
+    for _ in range(3):
+        step, batch = next(s1)
+    s2 = synthetic_stream(CFG, SHAPE, 2)
+    step2, batch2 = next(s2)
+    assert step == step2 == 2
+    np.testing.assert_array_equal(np.asarray(batch["tokens"]), np.asarray(batch2["tokens"]))
+
+
+def test_labels_are_shifted_tokens():
+    b = make_batch(CFG, SHAPE, 0)
+    np.testing.assert_array_equal(np.asarray(b["labels"][:, :-1]),
+                                  np.asarray(b["tokens"][:, 1:]))
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+def _tiny_state():
+    tc = TrainConfig(adam=AdamWConfig(state_dtype="int8"))
+    return init_state(CFG, PCFG, tc, jax.random.PRNGKey(0)), tc
+
+
+def test_checkpoint_roundtrip_bf16_and_int8():
+    state, _ = _tiny_state()
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, state)
+        target = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+        back = restore_checkpoint(d, target)
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(back)):
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_crc_detects_corruption():
+    state, _ = _tiny_state()
+    with tempfile.TemporaryDirectory() as d:
+        path = save_checkpoint(d, 1, state)
+        shard = os.path.join(path, "shard_00000.npz")
+        data = bytearray(open(shard, "rb").read())
+        data[len(data) // 2] ^= 0xFF
+        open(shard, "wb").write(bytes(data))
+        target = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+        with pytest.raises(Exception):
+            restore_checkpoint(d, target)
+
+
+def test_latest_pointer_and_retention():
+    state, _ = _tiny_state()
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, state, blocking=True)
+        assert latest_step(d) == 4
+        kept = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+        assert kept == ["step_00000003", "step_00000004"]
+
+
+def test_elastic_restore_dtype_cast():
+    """Restore works into a different dtype target (mesh/precision change)."""
+    state, _ = _tiny_state()
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, {"w": jnp.ones((8, 8), jnp.bfloat16)})
+        back = restore_checkpoint(d, {"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)})
+        assert back["w"].dtype == jnp.float32
+        np.testing.assert_array_equal(np.asarray(back["w"]), np.ones((8, 8), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Supervisor / fault tolerance
+# ---------------------------------------------------------------------------
+
+def _supervised_run(plan: FaultPlan, steps=12, ckpt_every=3):
+    tc = TrainConfig(warmup_steps=1, total_steps=steps)
+    state = init_state(CFG, PCFG, tc, jax.random.PRNGKey(0))
+    step_fn = jax.jit(make_train_step(CFG, PCFG, tc))
+    with tempfile.TemporaryDirectory() as d:
+        sup = Supervisor(CheckpointManager(d), SupervisorConfig(ckpt_every=ckpt_every),
+                         injector=FaultInjector(plan))
+        state, last = sup.run(state, step_fn, lambda s: make_batch(CFG, SHAPE, s), 0, steps)
+        return sup, last
+
+
+def test_supervisor_survives_worker_death():
+    sup, last = _supervised_run(FaultPlan(die_at=(5,)))
+    assert last == 12 and sup.restarts == 1
+
+
+def test_supervisor_quarantines_nan():
+    sup, last = _supervised_run(FaultPlan(nan_at=(7,)))
+    assert last == 12 and sup.nan_events == 1
+    assert all(np.isfinite(h["loss"]) for h in sup.history)
+
+
+def test_supervisor_gives_up_after_max_restarts():
+    plan = FaultPlan(die_at=tuple(range(1, 40)))
+    tc = TrainConfig(warmup_steps=1, total_steps=10)
+    state = init_state(CFG, PCFG, tc, jax.random.PRNGKey(0))
+    step_fn = jax.jit(make_train_step(CFG, PCFG, tc))
+    with tempfile.TemporaryDirectory() as d:
+        sup = Supervisor(CheckpointManager(d), SupervisorConfig(max_restarts=2),
+                         injector=FaultInjector(plan))
+        # injector fires once per step; with die_at on every step the fired-set
+        # lets each step pass on retry, so force re-death by clearing it
+        class Relentless(FaultInjector):
+            def before_step(self, step):
+                self.fired.clear()
+                super().before_step(step)
+
+        sup.injector = Relentless(plan)
+        with pytest.raises(Exception):
+            sup.run(state, step_fn, lambda s: make_batch(CFG, SHAPE, s), 0, 10)
+
+
+def test_training_resumes_identically_after_crash():
+    """Crash + restore + replay produces the same loss trajectory as no crash
+    (pure-function-of-step data pipeline)."""
+    tc = TrainConfig(warmup_steps=1, total_steps=10)
+    step_fn = jax.jit(make_train_step(CFG, PCFG, tc))
+
+    def batch_fn(s):
+        return make_batch(CFG, SHAPE, s)
+
+    # uninterrupted baseline
+    st = init_state(CFG, PCFG, tc, jax.random.PRNGKey(0))
+    base_losses = []
+    for s in range(8):
+        st, m = step_fn(st, batch_fn(s))
+        base_losses.append(float(m["loss"]))
+
+    with tempfile.TemporaryDirectory() as d:
+        sup = Supervisor(CheckpointManager(d), SupervisorConfig(ckpt_every=4),
+                         injector=FaultInjector(FaultPlan(die_at=(6,))))
+        st2 = init_state(CFG, PCFG, tc, jax.random.PRNGKey(0))
+        st2, last = sup.run(st2, step_fn, batch_fn, 0, 8)
+        by_step = {}
+        for h in sup.history:
+            by_step[h["step"]] = h["loss"]  # replayed steps overwrite
+        for s in range(8):
+            np.testing.assert_allclose(by_step[s], base_losses[s], rtol=1e-5)
