@@ -1,0 +1,30 @@
+# Developer entry points.  PYTHONPATH is injected so no install step is
+# needed; `make test` is exactly the tier-1 CI gate.
+
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-ci test-fast bench bench-quick bench-iru
+
+test:
+	$(PY) -m pytest -x -q
+
+# CI gate: tier-1 minus the suites that require the not-yet-built repro.dist
+# module (see ROADMAP "Open items"); drop the ignores once it lands.
+test-ci:
+	$(PY) -m pytest -x -q --ignore=tests/test_models.py \
+		--ignore=tests/test_serving.py --ignore=tests/test_distributed.py
+
+test-fast:
+	$(PY) -m pytest -x -q tests/test_kernels.py tests/test_iru_core.py \
+		tests/test_iru_streaming.py tests/test_graph_apps.py
+
+bench:
+	$(PY) -m benchmarks.run
+
+bench-quick:
+	$(PY) -m benchmarks.run --quick --skip-moe
+	$(PY) -m benchmarks.iru_throughput --quick
+
+bench-iru:
+	$(PY) -m benchmarks.iru_throughput

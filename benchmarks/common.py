@@ -31,7 +31,28 @@ DATASET_KW = {
     "kron": dict(scale=13),
     "msdoor": dict(scale=20),
 }
+# --quick: same connectivity regimes, frontier sizes capped for CI time.
+QUICK_DATASET_KW = {
+    "ca": dict(scale=32),
+    "cond": dict(n=2_000),
+    "delaunay": dict(scale=32),
+    "human": dict(n=800),
+    "kron": dict(scale=10),
+    "msdoor": dict(scale=10),
+}
 ALGOS = ("bfs", "sssp", "pr")
+
+_QUICK = False
+
+
+def set_quick(flag: bool) -> None:
+    """Cap frontier sizes (and cache separately) for CI-time runs."""
+    global _QUICK
+    _QUICK = bool(flag)
+
+
+def dataset_kw(name: str) -> dict:
+    return (QUICK_DATASET_KW if _QUICK else DATASET_KW)[name]
 
 # The IRU hash geometry of the paper: 1024 sets x 32 slots (4 partitions).
 # window_elems models the streaming lookahead: the hash drains under warp
@@ -58,7 +79,8 @@ def _run(algo: str, g, mode: str, recorder):
 def run_pair(algo: str, dataset: str, *, force: bool = False) -> dict:
     """Baseline + IRU traffic counts for one (algo, dataset) cell (cached)."""
     os.makedirs(RESULTS, exist_ok=True)
-    path = os.path.join(RESULTS, f"{algo}__{dataset}.json")
+    suffix = "__quick" if _QUICK else ""
+    path = os.path.join(RESULTS, f"{algo}__{dataset}{suffix}.json")
     if os.path.exists(path) and not force:
         with open(path) as f:
             out = json.load(f)
@@ -67,7 +89,7 @@ def run_pair(algo: str, dataset: str, *, force: bool = False) -> dict:
         iru = TrafficCounts(**out["iru"])
         out["report"] = Comparison(f"{algo}/{dataset}", base, iru).report()
         return out
-    g = make_dataset(dataset, **DATASET_KW[dataset])
+    g = make_dataset(dataset, **dataset_kw(dataset))
     out = {"algo": algo, "dataset": dataset,
            "n_nodes": g.n_nodes, "n_edges": g.n_edges}
     for mode in ("baseline", "iru"):

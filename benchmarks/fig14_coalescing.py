@@ -1,13 +1,23 @@
 """Figure 14: memory requests per warp instruction (paper: ~4 baseline ->
-~3 with IRU; 1.32x coalescing improvement)."""
+~3 with IRU; 1.32x coalescing improvement).
+
+The IRU traces behind these numbers run through the streaming reorder API
+(``reorder_frontier`` with the paper's 1024x32 geometry and an 8k-element
+lookahead window); ``--quick`` caps frontier sizes for CI runs.
+"""
 from __future__ import annotations
+
+import argparse
 
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import all_cells, geomean
 
 
-def run(force: bool = False):
+def run(force: bool = False, quick: bool = False):
+    if quick:
+        common.set_quick(True)
     rows = []
     for cell in all_cells(force):
         b = cell["baseline_accesses_per_warp"]
@@ -27,12 +37,16 @@ def run(force: bool = False):
     return rows
 
 
-def main():
+def main(quick: bool = False, force: bool = False):
     print("algo,dataset,baseline_acc_per_warp,iru_acc_per_warp,improvement")
-    for r in run():
+    for r in run(force=force, quick=quick):
         print(f"{r['algo']},{r['dataset']},{r['baseline_acc_per_warp']},"
               f"{r['iru_acc_per_warp']},{r['improvement']}")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    a = ap.parse_args()
+    main(quick=a.quick, force=a.force)

@@ -1,0 +1,131 @@
+"""IRU reorder-engine throughput (elements/sec) across frontier sizes.
+
+Tracks the perf trajectory of the repo's hottest path: the reorder engines of
+``core.iru``.  Engines measured:
+
+  sort        — stable-sort engine (XLA argsort), jit steady-state
+  hash        — batch-parallel hash engine (kernels/iru_reorder/batched.py)
+  hash_w8192  — same, streamed through 8192-element lookahead windows
+  hash_ref    — vectorized numpy oracle (host fast path)
+  seed_ref    — seed element-sequential numpy oracle   (capped size)
+  seed_pallas — seed element-sequential Pallas interpret (capped size)
+
+Writes ``BENCH_iru.json`` at the repo root so the numbers are versioned with
+the code.  The headline metric is ``speedup_hash_vs_seed_pallas_100k``: the
+batch-parallel engine vs the seed element-sequential path on a 100k-element
+stream (CPU).
+
+    PYTHONPATH=src python -m benchmarks.iru_throughput            # full sweep
+    PYTHONPATH=src python -m benchmarks.iru_throughput --quick    # CI-sized
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.iru import IRUConfig, iru_reorder, reorder_frontier
+from repro.kernels.iru_reorder.ref import hash_reorder_ref
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_iru.json")
+
+GEOM = dict(num_sets=1024, slots=32)
+SIZES = (1_000, 10_000, 100_000, 1_000_000)
+QUICK_SIZES = (1_000, 10_000)
+# element-sequential seed paths: one element at a time; keep sizes honest but
+# bounded so the sweep terminates
+SEED_CAP = 100_000
+SEED_PALLAS_CAP = 100_000
+
+
+def _time(fn, *, min_time: float = 0.2, max_reps: int = 50,
+          warmup: bool = True) -> float:
+    if warmup:
+        fn()  # jit compile / caches
+    reps, total = 0, 0.0
+    while reps == 0 or (total < min_time and reps < max_reps):
+        t0 = time.monotonic()
+        fn()
+        total += time.monotonic() - t0
+        reps += 1
+    return total / reps
+
+
+def _engines(n: int, quick: bool):
+    rng = np.random.default_rng(n)
+    idx_np = rng.integers(0, max(n, 2), n).astype(np.int32)
+    idx = jnp.asarray(idx_np)
+
+    sort_cfg = IRUConfig(mode="sort")
+    hash_cfg = IRUConfig(mode="hash", **GEOM)
+    hash_w_cfg = IRUConfig(mode="hash", window_elems=8192, **GEOM)
+    ref_cfg = IRUConfig(mode="hash_ref", **GEOM)
+
+    yield "sort", lambda: iru_reorder(idx, config=sort_cfg).indices.block_until_ready()
+    yield "hash", lambda: iru_reorder(idx, config=hash_cfg).indices.block_until_ready()
+    if n > 8192:
+        yield "hash_w8192", lambda: iru_reorder(
+            idx, config=hash_w_cfg).indices.block_until_ready()
+    yield "hash_ref", lambda: reorder_frontier(idx_np, config=ref_cfg)
+    if n <= SEED_CAP and not (quick and n > 10_000):
+        yield "seed_ref", lambda: hash_reorder_ref(
+            idx_np, np.zeros(n, np.float32), **GEOM)
+        from repro.kernels.iru_reorder.ops import hash_reorder
+
+        yield "seed_pallas", lambda: hash_reorder(
+            idx, engine="pallas", **GEOM).indices.block_until_ready()
+
+
+def run(quick: bool = False) -> dict:
+    sizes = QUICK_SIZES if quick else SIZES
+    results: dict[str, dict[str, float]] = {}
+    for n in sizes:
+        for name, fn in _engines(n, quick):
+            if name in ("seed_ref", "seed_pallas"):
+                # one timed rep, no warmup double-run: the first call carries
+                # jit compile for seed_pallas but is dwarfed by the loop itself
+                sec = _time(fn, min_time=0.0, max_reps=1, warmup=False)
+            else:
+                sec = _time(fn)
+            eps = n / sec if sec > 0 else float("inf")
+            results.setdefault(name, {})[str(n)] = round(eps, 1)
+            print(f"n={n:>9,}  {name:<12} {sec*1e3:10.2f} ms   {eps:14,.0f} elem/s")
+    out = {
+        "metric": "elements_per_second",
+        "backend": jax.default_backend(),
+        "geometry": GEOM,
+        "sizes": list(sizes),
+        "results": results,
+    }
+    key = str(100_000)
+    if key in results.get("hash", {}) and key in results.get("seed_pallas", {}):
+        out["speedup_hash_vs_seed_pallas_100k"] = round(
+            results["hash"][key] / results["seed_pallas"][key], 1)
+        out["speedup_hash_ref_vs_seed_ref_100k"] = round(
+            results["hash_ref"][key] / results["seed_ref"][key], 1)
+        print(f"\nhash vs seed_pallas @100k: "
+              f"{out['speedup_hash_vs_seed_pallas_100k']}x")
+        print(f"hash_ref vs seed_ref @100k: "
+              f"{out['speedup_hash_ref_vs_seed_ref_100k']}x")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--no-write", action="store_true")
+    args = ap.parse_args()
+    out = run(quick=args.quick)
+    if not args.no_write and not args.quick:
+        with open(OUT_PATH, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"wrote {os.path.normpath(OUT_PATH)}")
+
+
+if __name__ == "__main__":
+    main()

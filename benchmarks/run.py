@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python -m benchmarks.run            # everything cached
     PYTHONPATH=src python -m benchmarks.run --force    # re-simulate
+    PYTHONPATH=src python -m benchmarks.run --quick    # CI-sized frontiers
 
 Sections:
   fig14  coalescing (accesses/warp)        paper: 3.9 -> ~3, 1.32x
@@ -30,11 +31,16 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--skip-moe", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="cap frontier sizes so the full suite fits CI time")
     args = ap.parse_args()
 
-    from benchmarks import (fig4_overhead, fig11_accesses, fig12_noc,
+    from benchmarks import (common, fig4_overhead, fig11_accesses, fig12_noc,
                             fig13_perf_energy, fig14_coalescing, fig15_filter,
                             moe_dispatch, roofline)
+
+    if args.quick:
+        common.set_quick(True)
 
     if args.force:
         from benchmarks.common import all_cells

@@ -14,7 +14,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.apps.trace import TraceRecorder
-from repro.core import IRUConfig, iru_reorder
+from repro.core import IRUConfig
+from repro.core.iru import reorder_frontier
 from repro.graphs.csr import CSRGraph
 
 UNVISITED = np.iinfo(np.int32).max
@@ -56,11 +57,10 @@ def bfs(
         if ef.size == 0:
             break
         if mode == "iru":
-            stream = iru_reorder(jnp.asarray(ef), config=cfg)
-            ef_served = np.asarray(stream.indices)
+            ef_served, _, _, active = reorder_frontier(ef, config=cfg)
             if recorder is not None:
                 recorder.processed(ef.size)
-                recorder.access(ef_served, np.asarray(stream.active), atomic=False)
+                recorder.access(ef_served, active, atomic=False)
         else:
             ef_served = ef
             if recorder is not None:

@@ -18,8 +18,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.apps.trace import TraceRecorder
-from repro.core import IRUConfig, iru_reorder
-from repro.core.iru import iru_scatter_add
+from repro.core import IRUConfig
+from repro.core.iru import iru_scatter_add, reorder_frontier
 from repro.graphs.csr import CSRGraph
 
 
@@ -43,10 +43,7 @@ def pagerank(
         contrib = (rank / deg)[srcs]
         acc = np.zeros(n, np.float32)
         if mode == "iru":
-            stream = iru_reorder(jnp.asarray(dsts), jnp.asarray(contrib), config=cfg)
-            sidx = np.asarray(stream.indices)
-            sval = np.asarray(stream.secondary)
-            sact = np.asarray(stream.active)
+            sidx, sval, _, sact = reorder_frontier(dsts, contrib, config=cfg)
             if recorder is not None:
                 recorder.processed(dsts.size)
                 recorder.access(sidx, sact, atomic=True)

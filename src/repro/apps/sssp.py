@@ -8,12 +8,12 @@ from __future__ import annotations
 
 from typing import Optional
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.apps.bfs import _expand
 from repro.apps.trace import TraceRecorder
-from repro.core import IRUConfig, iru_reorder
+from repro.core import IRUConfig
+from repro.core.iru import reorder_frontier
 from repro.graphs.csr import CSRGraph
 
 INF = np.float32(np.inf)
@@ -58,10 +58,7 @@ def sssp(
         dsts = col_idx[offs]
         cand = dist[srcs] + weights[offs]
         if mode == "iru":
-            stream = iru_reorder(jnp.asarray(dsts), jnp.asarray(cand), config=cfg)
-            sidx = np.asarray(stream.indices)
-            scand = np.asarray(stream.secondary)
-            sact = np.asarray(stream.active)
+            sidx, scand, _, sact = reorder_frontier(dsts, cand, config=cfg)
             if recorder is not None:
                 recorder.processed(dsts.size)
                 recorder.access(sidx, sact, atomic=True)  # merged atomicMin stream

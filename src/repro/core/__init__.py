@@ -16,6 +16,7 @@ from repro.core.iru import (
     iru_scatter_add,
     iru_scatter_min,
     load_iru_gather,
+    reorder_frontier,
 )
 
 __all__ = [
@@ -34,6 +35,7 @@ __all__ = [
     "load_iru_gather",
     "mean_accesses_per_group",
     "merge_sorted",
+    "reorder_frontier",
     "run_starts",
     "total_accesses",
 ]

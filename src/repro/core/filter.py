@@ -59,7 +59,9 @@ def merge_sorted(
     segs = jnp.cumsum(first.astype(jnp.int32)) - 1
     vals = values
     if active is not None:
-        vals = jnp.where(active, values, jnp.asarray(_INIT[op], values.dtype))
+        # lane mask broadcasts across trailing payload dims ([n] or [n, k])
+        lane = active.reshape(active.shape + (1,) * (values.ndim - 1))
+        vals = jnp.where(lane, values, jnp.asarray(_INIT[op], values.dtype))
     if op == "add":
         merged = jax.ops.segment_sum(vals, segs, num_segments=n)
     elif op == "min":
@@ -70,7 +72,7 @@ def merge_sorted(
         raise ValueError(f"unknown filter op {op!r}")
     out = merged[segs]
     if active is not None:
-        out = jnp.where(active, out, values)
+        out = jnp.where(lane, out, values)
     return out, first
 
 

@@ -10,13 +10,14 @@ becomes one pure transform::
     stream = iru_reorder(indices, secondary, config=IRUConfig(...))
 
 where ``stream.indices`` is the reordered index vector, ``stream.secondary``
-the co-reordered (and possibly merged) payload, ``stream.positions`` the
-original position of each element (the paper's ``pos`` return), and
-``stream.active`` the per-lane boolean of ``load_iru`` (False for lanes whose
-element was merged/filtered out).  Consumers perform the irregular access with
-``stream.indices`` in the new order — exactly the contract of Figures 8-10.
+the co-reordered (and possibly merged) payload — ``[n]`` or ``[n, k]`` —
+``stream.positions`` the original position of each element (the paper's
+``pos`` return, always int32), and ``stream.active`` the per-lane boolean of
+``load_iru`` (False for lanes whose element was merged/filtered out).
+Consumers perform the irregular access with ``stream.indices`` in the new
+order — exactly the contract of Figures 8-10.
 
-Two reorder engines:
+Three reorder engines:
 
 * ``mode="sort"`` — stable sort by index (so equal indices are adjacent and
   block grouping is perfect).  O(n log n), XLA-native, the
@@ -26,15 +27,28 @@ Two reorder engines:
   hash of ``num_sets`` sets × ``slots`` slots keyed on the memory-block id,
   conflict-tolerant insertion, flush-on-full, merge-on-duplicate.  O(n) work,
   imperfect coalescing under conflicts — the paper's actual design point.
-  Backed by kernels/iru_reorder (Pallas; interpret=True on CPU).
+  Backed by kernels/iru_reorder: the batch-parallel JAX engine by default
+  (``config.engine="batched"``), or the element-sequential Pallas
+  behavioural twin (``"pallas"``).
+* ``mode="hash_ref"`` — the numpy oracle (vectorized fast path), identical
+  semantics with zero tracing; what host-side benchmark drivers use.
+
+Streaming windows (``config.window_elems=w``) model the hardware's bounded
+lookahead: the stream is processed in independent w-element windows.  Full
+windows are evaluated as one ``lax.map`` over a single compiled window body —
+an n-element stream costs one trace of the window body (plus one for a
+ragged tail) regardless of ``n / w``, instead of the seed's one trace and one
+host concatenation per window.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Literal, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import coalescing
 from repro.core import filter as filt
@@ -59,7 +73,10 @@ class IRUConfig:
     # hash-engine geometry (paper: 1024 sets x 32 slots, 4 partitions)
     num_sets: int = 1024
     slots: int = 32
-    interpret: Optional[bool] = None  # None = auto (interpret off-TPU)
+    # hash-engine realization: "batched" (batch-parallel round decomposition,
+    # default) or "pallas" (element-sequential behavioural twin)
+    engine: str = "batched"
+    interpret: Optional[bool] = None  # None = auto (resolved in kernels ops)
     # bounded lookahead: the hardware IRU reorders a *streaming window* (hash
     # occupancy under warp-request drain + timeout, §3.2.2), never the whole
     # frontier.  When set, the stream is processed in independent chunks of
@@ -93,25 +110,40 @@ def iru_reorder(
     config: IRUConfig = IRUConfig(),
 ) -> IRUStream:
     """Reorder (and optionally merge) an irregular-access index stream."""
-    indices = indices.astype(jnp.int32)
+    indices = jnp.asarray(indices).astype(jnp.int32)
     n = indices.shape[0]
     if secondary is None:
         secondary = jnp.zeros((n,), jnp.float32)
-    w = config.window_elems
-    if w is not None and n > w:
-        # bounded-lookahead streaming: independent windows, concatenated
-        sub = dataclasses.replace(config, window_elems=None)
-        parts = [
-            iru_reorder(indices[s : s + w], secondary[s : s + w], config=sub)
-            for s in range(0, n, w)
-        ]
-        return IRUStream(
-            jnp.concatenate([p.indices for p in parts]),
-            jnp.concatenate([p.secondary for p in parts]),
-            jnp.concatenate([p.positions + s for p, s in
-                             zip(parts, range(0, n, w))]),
-            jnp.concatenate([p.active for p in parts]),
-        )
+    else:
+        # canonicalize before capturing the reference dtype: host float64 /
+        # int64 payloads downcast here once, not inside an engine
+        secondary = jnp.asarray(secondary)
+    if secondary.ndim not in (1, 2) or secondary.shape[0] != n:
+        raise ValueError(
+            f"secondary must be [n] or [n, k] with n={n}, got {secondary.shape}")
+    sec_dtype = secondary.dtype
+
+    if config.mode == "hash_ref":
+        oi, osec, opos, oact = _hash_ref_host(
+            np.asarray(indices), np.asarray(secondary), config)
+        stream = IRUStream(jnp.asarray(oi), jnp.asarray(osec),
+                           jnp.asarray(opos), jnp.asarray(oact))
+    elif config.window_elems is not None and n > config.window_elems:
+        stream = _windowed_reorder(indices, secondary, config)
+    else:
+        stream = _reorder_window(indices, secondary, config)
+
+    # explicit dtype postconditions through every engine (window bookkeeping
+    # must stay int32; payloads — including 2-D — must keep their dtype)
+    assert stream.positions.dtype == jnp.int32, stream.positions.dtype
+    assert stream.secondary.dtype == sec_dtype, (stream.secondary.dtype, sec_dtype)
+    return stream
+
+
+def _reorder_window(
+    indices: jax.Array, secondary: jax.Array, config: IRUConfig
+) -> IRUStream:
+    """One window (or the whole stream) through the configured jnp engine."""
     if config.mode == "sort":
         stream = _sort_reorder(indices, secondary, config)
     elif config.mode == "hash":
@@ -126,22 +158,8 @@ def iru_reorder(
             block_bytes=config.block_bytes,
             filter_op=config.filter_op,
             interpret=config.interpret,
+            engine=config.engine,
         )
-    elif config.mode == "hash_ref":
-        # numpy oracle of the hash engine — bit-identical semantics, no
-        # tracing; the host-side benchmark drivers use this for big frontiers
-        # (the interpret-mode Pallas kernel is element-sequential in Python).
-        import numpy as np
-
-        from repro.kernels.iru_reorder.ref import hash_reorder_ref
-
-        oi, osec, opos, oact = hash_reorder_ref(
-            np.asarray(indices), np.asarray(secondary),
-            num_sets=config.num_sets, slots=config.slots,
-            elem_bytes=config.target_elem_bytes, block_bytes=config.block_bytes,
-            filter_op=config.filter_op)
-        stream = IRUStream(jnp.asarray(oi), jnp.asarray(osec),
-                           jnp.asarray(opos), jnp.asarray(oact))
     else:
         raise ValueError(f"unknown IRU mode {config.mode!r}")
     if config.compact and config.filter_op is not None:
@@ -150,6 +168,114 @@ def iru_reorder(
         )
         stream = IRUStream(idx, sec, pos, act)
     return stream
+
+
+@functools.partial(jax.jit, static_argnames=("config",))
+def _windowed_reorder(
+    indices: jax.Array, secondary: jax.Array, config: IRUConfig
+) -> IRUStream:
+    """Bounded-lookahead streaming: independent windows, concatenated.
+
+    All full windows are evaluated by ONE ``lax.map`` over a single compiled
+    window body (the seed unrolled a Python loop: one trace + one host
+    concatenation per window).  A ragged tail (``n % w != 0``) is one extra
+    call of the same body at the tail shape.  The whole pipeline is jitted
+    (``config`` is a frozen dataclass, hence a static cache key), so a given
+    stream shape compiles exactly once.
+    """
+    w = config.window_elems
+    n = indices.shape[0]
+    sub = dataclasses.replace(config, window_elems=None)
+    k, n_full = n // w, (n // w) * w
+    payload = secondary.shape[1:]
+    parts: list[tuple[jax.Array, jax.Array, jax.Array, jax.Array]] = []
+
+    if k:
+        offsets = jnp.arange(k, dtype=jnp.int32) * jnp.int32(w)
+
+        def body(xs):
+            idx_w, sec_w, off = xs
+            s = _reorder_window(idx_w, sec_w, sub)
+            return s.indices, s.secondary, s.positions + off, s.active
+
+        oi, osec, opos, oact = jax.lax.map(
+            body,
+            (indices[:n_full].reshape(k, w),
+             secondary[:n_full].reshape((k, w) + payload),
+             offsets),
+        )
+        parts.append((oi.reshape(-1), osec.reshape((-1,) + payload),
+                      opos.reshape(-1), oact.reshape(-1)))
+    if n_full < n:
+        s = _reorder_window(indices[n_full:], secondary[n_full:], sub)
+        parts.append((s.indices, s.secondary,
+                      s.positions + jnp.int32(n_full), s.active))
+    if len(parts) == 1:
+        return IRUStream(*parts[0])
+    return IRUStream(*(jnp.concatenate([p[i] for p in parts], axis=0)
+                       for i in range(4)))
+
+
+def _hash_ref_host(
+    indices: np.ndarray, secondary: np.ndarray, config: IRUConfig
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """numpy oracle of the hash engine — identical semantics, no tracing.
+
+    Host-side benchmark drivers run whole frontiers through this; it uses the
+    vectorized ``hash_reorder_ref_vec`` fast path per window, so big frontiers
+    stop paying O(n) Python.
+    """
+    from repro.kernels.iru_reorder.ref import hash_reorder_ref_vec
+
+    n = indices.shape[0]
+    if n == 0:
+        return (np.zeros(0, np.int32),
+                np.zeros((0,) + secondary.shape[1:], secondary.dtype),
+                np.zeros(0, np.int32), np.zeros(0, bool))
+    w = config.window_elems if config.window_elems is not None else n
+    outs = []
+    for s0 in range(0, n, w):
+        oi, osec, opos, oact = hash_reorder_ref_vec(
+            indices[s0 : s0 + w], secondary[s0 : s0 + w],
+            num_sets=config.num_sets, slots=config.slots,
+            elem_bytes=config.target_elem_bytes, block_bytes=config.block_bytes,
+            filter_op=config.filter_op)
+        opos = (opos + np.int32(s0)).astype(np.int32)
+        # no compaction pass needed: the oracle already emits survivors at the
+        # front and filtered lanes at the tail (compact would be the identity)
+        outs.append((oi, osec, opos, oact))
+    if len(outs) == 1:
+        return outs[0]
+    return tuple(np.concatenate([o[i] for o in outs], axis=0) for i in range(4))
+
+
+def reorder_frontier(
+    indices,
+    secondary=None,
+    *,
+    config: IRUConfig,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Host-side streaming entry point for frontier-driven apps.
+
+    Accepts numpy (or anything array-like), returns numpy
+    ``(indices, secondary, positions, active)``.  ``hash_ref`` streams stay
+    entirely on the host (no device round-trip); jnp engines convert once at
+    each boundary.
+    """
+    idx = np.asarray(indices, np.int32)
+    sec = (np.zeros(idx.shape, np.float32) if secondary is None
+           else np.asarray(secondary))
+    # canonicalize like the jnp engines (x64-disabled) so the output dtype
+    # does not depend on which engine the config selects
+    if sec.dtype == np.float64:
+        sec = sec.astype(np.float32)
+    elif sec.dtype == np.int64:
+        sec = sec.astype(np.int32)
+    if config.mode == "hash_ref":
+        return _hash_ref_host(idx, sec, config)
+    stream = iru_reorder(jnp.asarray(idx), jnp.asarray(sec), config=config)
+    return (np.asarray(stream.indices), np.asarray(stream.secondary),
+            np.asarray(stream.positions), np.asarray(stream.active))
 
 
 def _sort_reorder(indices: jax.Array, secondary: jax.Array, cfg: IRUConfig) -> IRUStream:

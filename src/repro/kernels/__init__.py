@@ -7,7 +7,12 @@ Each kernel directory holds:
   ref.py    — pure-jnp / numpy oracle the tests assert against
 
 Kernels:
-  iru_reorder      — the reordering hash (paper §3.2-3.3), bounded O(n) binning
+  iru_reorder      — the reordering hash (paper §3.2-3.3), bounded O(n)
+                     binning; batch-parallel engine (batched.py) + Pallas
+                     behavioural twin, selected via ops.hash_reorder(engine=)
   segment_merge    — duplicate merge (filter unit: fp-add / int-min / int-max)
   coalesced_gather — block-reuse gather for binned streams (+ timeout fallback)
+
+interpret-mode auto-detection for every Pallas wrapper lives in
+iru_reorder.ops.resolve_interpret (single source of truth).
 """

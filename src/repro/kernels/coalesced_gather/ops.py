@@ -17,6 +17,7 @@ from repro.kernels.coalesced_gather.coalesced_gather import (
     window_contract_ok,
 )
 from repro.kernels.coalesced_gather.ref import coalesced_gather_ref
+from repro.kernels.iru_reorder.ops import resolve_interpret
 
 
 @functools.partial(jax.jit, static_argnames=("group", "window", "use_pallas", "interpret"))
@@ -31,8 +32,7 @@ def coalesced_gather(
 ) -> jax.Array:
     if not use_pallas:
         return coalesced_gather_ref(table, indices)
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    interpret = resolve_interpret(interpret)
     ok = window_contract_ok(indices, group=group, window=window)
     return jax.lax.cond(
         ok,

@@ -1,19 +1,27 @@
 """Pallas kernel: the IRU reordering hash (behavioural twin of §3.2-3.3).
 
 The hardware is a direct-mapped, multi-banked SRAM hash that elements stream
-through at one element/cycle/partition.  The kernel mirrors that dataflow:
-all state (set tags, payloads, positions, occupancy) lives in VMEM/SMEM
-scratch — the TPU analogue of the 80 KB/partition SRAM — and the element
-stream is consumed by a sequential loop, flushing full sets to the output
-stream exactly like the Data Replier services full entries to warps.
+through at one element/cycle/partition.  This package realizes that unit
+twice, sharing one output spec (``ref.hash_reorder_ref``):
 
-Semantics are bit-identical to ``ref.hash_reorder_ref`` (shared spec there).
+* **This kernel** is the cycle-level twin: all state (set tags, payloads,
+  positions, occupancy) lives in VMEM/SMEM scratch — the TPU analogue of the
+  80 KB/partition SRAM — and the element stream is consumed by a sequential
+  ``fori_loop``, flushing full sets to the output stream exactly like the
+  Data Replier services full entries to warps.  One element per iteration:
+  the most literal transcription, used to validate TPU lowering and as the
+  seed of the throughput benchmark (``benchmarks/iru_throughput.py``).
+* **``batched.py``** is the production dataflow (the default engine): block
+  keys and hash sets for the whole stream are computed at once, each set's
+  stream is decomposed into occupancy *rounds* (the residency periods
+  between flushes), duplicates are resolved with segment reductions, and
+  the reordered stream is materialized by one scatter — batch-parallel
+  work in place of the per-element recurrence, identical output stream.
 
-TPU notes: the element loop is sequential at element granularity, matching
-hardware behaviour for validation; a production variant would consume 8
-elements per iteration with banked sets (the paper's 2-way banking).  On this
-CPU-only container the kernel runs under ``interpret=True``; the pallas_call
-carries real BlockSpecs so it lowers for TPU unchanged.
+Selection happens in ``ops.hash_reorder(engine=...)``; ``interpret`` mode
+auto-detection also lives there (``resolve_interpret``), so nothing here
+hardcodes CPU vs TPU.  The pallas_call carries real BlockSpecs so this
+kernel lowers for TPU unchanged.
 """
 from __future__ import annotations
 

@@ -1,15 +1,35 @@
-"""jit'd public wrapper around the IRU hash-reorder kernel."""
+"""Public wrapper around the IRU hash-reorder engines.
+
+Two engines, identical semantics (both validated against ``ref.py``):
+
+* ``engine="batched"`` — batch-parallel pure-JAX pipeline (``batched.py``);
+  the default everywhere: orders of magnitude faster on CPU, lowers to
+  TPU-native scatters unchanged.
+* ``engine="pallas"``  — the element-sequential Pallas kernel
+  (``iru_reorder.py``), the behavioural twin of the hardware dataflow; kept
+  for TPU-lowering validation and as the cycle-accurate reference.
+
+``interpret`` auto-detection lives HERE and only here (:func:`resolve_interpret`):
+``None`` means "interpret everywhere except a real TPU backend", so the same
+code lowers for TPU unchanged and no caller hardcodes ``interpret=True``.
+The other kernel packages (``segment_merge``, ``coalesced_gather``) import
+this resolver rather than re-deriving it.
+"""
 from __future__ import annotations
 
-from typing import Optional
+from typing import Literal, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.iru_reorder.batched import hash_reorder_batched
 from repro.kernels.iru_reorder.iru_reorder import hash_reorder_pallas
 
+Engine = Literal["batched", "pallas"]
 
-def _auto_interpret(flag: Optional[bool]) -> bool:
+
+def resolve_interpret(flag: Optional[bool]) -> bool:
+    """Single source of truth for Pallas interpret-mode auto-detection."""
     if flag is not None:
         return flag
     return jax.default_backend() != "tpu"
@@ -25,20 +45,38 @@ def hash_reorder(
     block_bytes: int = 128,
     filter_op: Optional[str] = None,
     interpret: Optional[bool] = None,
+    engine: Engine = "batched",
 ):
     """Paper-faithful O(n) bounded reorder. Returns an ``IRUStream``."""
     from repro.core.iru import IRUStream  # late import: core imports us lazily
 
     if secondary is None:
         secondary = jnp.zeros(indices.shape, jnp.float32)
-    out_idx, out_sec, out_pos, out_act = hash_reorder_pallas(
-        indices,
-        secondary,
-        num_sets=num_sets,
-        slots=slots,
-        elem_bytes=elem_bytes,
-        block_bytes=block_bytes,
-        filter_op=filter_op,
-        interpret=_auto_interpret(interpret),
-    )
-    return IRUStream(out_idx, out_sec, out_pos, out_act)
+    if engine == "batched":
+        out = hash_reorder_batched(
+            indices,
+            secondary,
+            num_sets=num_sets,
+            slots=slots,
+            elem_bytes=elem_bytes,
+            block_bytes=block_bytes,
+            filter_op=filter_op,
+        )
+    elif engine == "pallas":
+        if secondary.ndim != 1:
+            raise NotImplementedError(
+                "the pallas engine carries scalar payloads only; "
+                "use engine='batched' for [n, k] secondaries")
+        out = hash_reorder_pallas(
+            indices,
+            secondary,
+            num_sets=num_sets,
+            slots=slots,
+            elem_bytes=elem_bytes,
+            block_bytes=block_bytes,
+            filter_op=filter_op,
+            interpret=resolve_interpret(interpret),
+        )
+    else:
+        raise ValueError(f"unknown hash engine {engine!r}")
+    return IRUStream(*out)

@@ -5,6 +5,7 @@ from typing import Optional
 
 import jax
 
+from repro.kernels.iru_reorder.ops import resolve_interpret
 from repro.kernels.segment_merge.ref import segment_merge_ref
 from repro.kernels.segment_merge.segment_merge import segment_merge_pallas
 
@@ -21,6 +22,5 @@ def segment_merge(
     """Merge duplicate adjacent indices; returns ``(merged, survivor_mask)``."""
     if not use_pallas:
         return segment_merge_ref(sorted_indices, values, op)
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    return segment_merge_pallas(sorted_indices, values, op=op, chunk=chunk, interpret=interpret)
+    return segment_merge_pallas(sorted_indices, values, op=op, chunk=chunk,
+                                interpret=resolve_interpret(interpret))

@@ -1,0 +1,242 @@
+"""Window-streaming + batch-parallel engine tests for the IRU core.
+
+Covers the streaming contract of ``iru_reorder``:
+  * (indices, positions, active) is a permutation of the input under every
+    engine and window size,
+  * ``window_elems=w`` output equals the per-window reference concatenation,
+    including ragged tails (``n % w != 0``),
+  * ``iru_reorder`` is jit- and vmap-safe,
+  * the batch-parallel hash engine and the vectorized numpy oracle are
+    stream-identical to the element-sequential oracle,
+  * int32 position bookkeeping and dtype preservation for 2-D payloads.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.iru import IRUConfig, IRUStream, iru_reorder, reorder_frontier
+from repro.kernels.iru_reorder.ops import hash_reorder, resolve_interpret
+from repro.kernels.iru_reorder.ref import hash_reorder_ref, hash_reorder_ref_vec
+
+
+def _windowed_concat_ref(idx, sec, cfg, w):
+    """Seed semantics: independent per-window reorders, concatenated."""
+    sub = dataclasses.replace(cfg, window_elems=None)
+    parts = [
+        iru_reorder(jnp.asarray(idx[s : s + w]), jnp.asarray(sec[s : s + w]),
+                    config=sub)
+        for s in range(0, len(idx), w)
+    ]
+    return (
+        np.concatenate([np.asarray(p.indices) for p in parts]),
+        np.concatenate([np.asarray(p.secondary) for p in parts]),
+        np.concatenate([np.asarray(p.positions) + s
+                        for p, s in zip(parts, range(0, len(idx), w))]),
+        np.concatenate([np.asarray(p.active) for p in parts]),
+    )
+
+
+def _assert_streams_equal(stream: IRUStream, ref_tuple, rtol=1e-6):
+    ri, rs, rp, ra = ref_tuple
+    np.testing.assert_array_equal(ri, np.asarray(stream.indices))
+    np.testing.assert_array_equal(rp, np.asarray(stream.positions))
+    np.testing.assert_array_equal(ra, np.asarray(stream.active))
+    np.testing.assert_allclose(rs, np.asarray(stream.secondary), rtol=rtol)
+
+
+# ---------------------------------------------------------------------------
+# window-streaming equivalence (incl. ragged tails)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["sort", "hash", "hash_ref"])
+@pytest.mark.parametrize("filter_op", [None, "add", "min"])
+@pytest.mark.parametrize("n,w", [(256, 64), (250, 64), (100, 33), (65, 64), (64, 64)])
+def test_windowed_equals_per_window_concat(mode, filter_op, n, w):
+    rng = np.random.default_rng(n * 7 + w)
+    idx = rng.integers(0, 300, n).astype(np.int32)
+    sec = rng.random(n).astype(np.float32)
+    cfg = IRUConfig(mode=mode, filter_op=filter_op, num_sets=32, slots=8,
+                    window_elems=w)
+    stream = iru_reorder(jnp.asarray(idx), jnp.asarray(sec), config=cfg)
+    _assert_streams_equal(stream, _windowed_concat_ref(idx, sec, cfg, w))
+
+
+@pytest.mark.parametrize("mode", ["sort", "hash", "hash_ref"])
+@pytest.mark.parametrize("filter_op", [None, "add"])
+@pytest.mark.parametrize("w", [16, 50, 200])
+def test_windowed_stream_is_permutation(mode, filter_op, w):
+    rng = np.random.default_rng(w)
+    n = 173
+    idx = rng.integers(0, 400, n).astype(np.int32)
+    sec = rng.random(n).astype(np.float32)
+    cfg = IRUConfig(mode=mode, filter_op=filter_op, num_sets=16, slots=4,
+                    window_elems=w)
+    s = iru_reorder(jnp.asarray(idx), jnp.asarray(sec), config=cfg)
+    pos = np.asarray(s.positions)
+    np.testing.assert_array_equal(np.sort(pos), np.arange(n))
+    np.testing.assert_array_equal(idx[pos], np.asarray(s.indices))
+    assert s.positions.dtype == jnp.int32
+    if filter_op is None:
+        assert bool(np.all(np.asarray(s.active)))
+    else:
+        # one survivor per unique index *per window*
+        act = np.asarray(s.active)
+        assert act.sum() >= len(set(idx.tolist()))
+
+
+# ---------------------------------------------------------------------------
+# jit / vmap safety
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cfg", [
+    IRUConfig(mode="sort"),
+    IRUConfig(mode="sort", filter_op="add"),
+    IRUConfig(mode="hash", num_sets=32, slots=8),
+    IRUConfig(mode="hash", num_sets=32, slots=8, filter_op="min",
+              window_elems=48),
+])
+def test_iru_reorder_is_jit_safe(cfg):
+    rng = np.random.default_rng(0)
+    idx = jnp.asarray(rng.integers(0, 200, 150).astype(np.int32))
+    sec = jnp.asarray(rng.random(150).astype(np.float32))
+
+    @jax.jit
+    def f(i, s):
+        st = iru_reorder(i, s, config=cfg)
+        return st.indices, st.secondary, st.positions, st.active
+
+    eager = iru_reorder(idx, sec, config=cfg)
+    jit_i, jit_s, jit_p, jit_a = f(idx, sec)
+    np.testing.assert_array_equal(np.asarray(eager.indices), np.asarray(jit_i))
+    np.testing.assert_array_equal(np.asarray(eager.positions), np.asarray(jit_p))
+    np.testing.assert_array_equal(np.asarray(eager.active), np.asarray(jit_a))
+    np.testing.assert_allclose(np.asarray(eager.secondary), np.asarray(jit_s),
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("cfg", [
+    IRUConfig(mode="sort"),
+    IRUConfig(mode="hash", num_sets=16, slots=4),
+    IRUConfig(mode="hash", num_sets=16, slots=4, filter_op="add"),
+])
+def test_iru_reorder_is_vmap_safe(cfg):
+    rng = np.random.default_rng(1)
+    batch = jnp.asarray(rng.integers(0, 100, (4, 60)).astype(np.int32))
+
+    vm = jax.vmap(lambda i: iru_reorder(i, config=cfg).indices)(batch)
+    seq = np.stack([np.asarray(iru_reorder(batch[i], config=cfg).indices)
+                    for i in range(batch.shape[0])])
+    np.testing.assert_array_equal(np.asarray(vm), seq)
+
+
+# ---------------------------------------------------------------------------
+# engine equivalence: batched / ref_vec vs the element-sequential oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 7, 64, 513, 2048])
+@pytest.mark.parametrize("num_sets,slots", [(16, 4), (128, 32)])
+@pytest.mark.parametrize("filter_op", [None, "add", "min", "max"])
+def test_ref_vec_bit_identical_to_ref(n, num_sets, slots, filter_op):
+    rng = np.random.default_rng(n * 31 + slots)
+    idx = rng.integers(0, 4 * n + 1, n).astype(np.int32)
+    sec = rng.random(n).astype(np.float32)
+    a = hash_reorder_ref(idx, sec, num_sets=num_sets, slots=slots,
+                         filter_op=filter_op)
+    b = hash_reorder_ref_vec(idx, sec, num_sets=num_sets, slots=slots,
+                             filter_op=filter_op)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)  # bit-identical, payloads included
+
+
+@pytest.mark.parametrize("filter_op", [None, "add", "min", "max"])
+@pytest.mark.parametrize("payload_dtype", [np.float32, np.int32])
+def test_batched_engine_2d_payloads(filter_op, payload_dtype):
+    rng = np.random.default_rng(5)
+    n, k = 400, 3
+    idx = rng.integers(0, 120, n).astype(np.int32)
+    if payload_dtype == np.float32:
+        sec = rng.random((n, k)).astype(payload_dtype)
+    else:
+        sec = rng.integers(0, 1000, (n, k)).astype(payload_dtype)
+    ri, rs, rp, ra = hash_reorder_ref(idx, sec, num_sets=32, slots=8,
+                                      filter_op=filter_op)
+    st = hash_reorder(jnp.asarray(idx), jnp.asarray(sec), num_sets=32, slots=8,
+                      filter_op=filter_op)
+    np.testing.assert_array_equal(ri, np.asarray(st.indices))
+    np.testing.assert_array_equal(rp, np.asarray(st.positions))
+    np.testing.assert_array_equal(ra, np.asarray(st.active))
+    np.testing.assert_allclose(rs, np.asarray(st.secondary), rtol=1e-5, atol=1e-5)
+    assert st.secondary.dtype == sec.dtype
+    assert st.positions.dtype == jnp.int32
+
+
+def test_pallas_engine_rejects_2d_payloads():
+    idx = jnp.zeros((8,), jnp.int32)
+    sec = jnp.zeros((8, 2), jnp.float32)
+    with pytest.raises(NotImplementedError):
+        hash_reorder(idx, sec, num_sets=16, slots=4, engine="pallas")
+
+
+@pytest.mark.parametrize("mode", ["sort", "hash", "hash_ref"])
+def test_2d_payload_dtype_through_core(mode):
+    rng = np.random.default_rng(9)
+    idx = rng.integers(0, 50, 200).astype(np.int32)
+    sec = rng.random((200, 3)).astype(np.float32)
+    cfg = IRUConfig(mode=mode, filter_op="add", num_sets=16, slots=4)
+    st = iru_reorder(jnp.asarray(idx), jnp.asarray(sec), config=cfg)
+    assert st.secondary.dtype == jnp.float32
+    assert st.secondary.shape == (200, 3)
+    assert st.positions.dtype == jnp.int32
+    # merged payload mass is conserved over surviving lanes
+    act = np.asarray(st.active)
+    np.testing.assert_allclose(np.asarray(st.secondary)[act].sum(axis=0),
+                               sec.sum(axis=0), rtol=1e-4)
+
+
+def test_secondary_shape_validation():
+    with pytest.raises(ValueError):
+        iru_reorder(jnp.zeros((4,), jnp.int32), jnp.zeros((5,), jnp.float32))
+    with pytest.raises(ValueError):
+        iru_reorder(jnp.zeros((4,), jnp.int32),
+                    jnp.zeros((4, 2, 2), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# host streaming entry + interpret resolution
+# ---------------------------------------------------------------------------
+
+def test_reorder_frontier_stays_numpy_for_hash_ref():
+    rng = np.random.default_rng(2)
+    idx = rng.integers(0, 500, 1000).astype(np.int32)
+    cfg = IRUConfig(mode="hash_ref", num_sets=64, slots=8, window_elems=256)
+    si, ss, sp, sa = reorder_frontier(idx, config=cfg)
+    assert all(isinstance(a, np.ndarray) for a in (si, ss, sp, sa))
+    assert sp.dtype == np.int32
+    np.testing.assert_array_equal(np.sort(sp), np.arange(1000))
+    np.testing.assert_array_equal(idx[sp], si)
+
+
+def test_reorder_frontier_matches_iru_reorder():
+    rng = np.random.default_rng(3)
+    idx = rng.integers(0, 300, 500).astype(np.int32)
+    vals = rng.random(500).astype(np.float32)
+    for mode in ("sort", "hash", "hash_ref"):
+        cfg = IRUConfig(mode=mode, filter_op="add", num_sets=32, slots=8,
+                        window_elems=128)
+        si, ss, sp, sa = reorder_frontier(idx, vals, config=cfg)
+        st = iru_reorder(jnp.asarray(idx), jnp.asarray(vals), config=cfg)
+        np.testing.assert_array_equal(si, np.asarray(st.indices))
+        np.testing.assert_array_equal(sp, np.asarray(st.positions))
+        np.testing.assert_array_equal(sa, np.asarray(st.active))
+        np.testing.assert_allclose(ss, np.asarray(st.secondary), rtol=1e-6)
+
+
+def test_resolve_interpret_single_source_of_truth():
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+    # on this container (CPU backend) auto-detection must interpret
+    expected = jax.default_backend() != "tpu"
+    assert resolve_interpret(None) is expected

@@ -62,6 +62,24 @@ def test_hash_reorder_is_permutation():
     np.testing.assert_array_equal(idx[np.asarray(st.positions)], np.asarray(st.indices))
 
 
+@pytest.mark.parametrize("n,num_sets,slots", [(257, 16, 4), (400, 64, 8)])
+@pytest.mark.parametrize("filter_op", [None, "add"])
+def test_hash_reorder_pallas_engine_matches_ref(n, num_sets, slots, filter_op):
+    """The element-sequential Pallas behavioural twin stays validated even
+    though the default engine is the batch-parallel one."""
+    rng = np.random.default_rng(n + slots)
+    idx = rng.integers(0, 2 * n, n).astype(np.int32)
+    sec = rng.random(n).astype(np.float32)
+    ri, rs, rp, ra = hash_reorder_ref(idx, sec, num_sets=num_sets, slots=slots,
+                                      filter_op=filter_op)
+    st = hash_reorder(jnp.asarray(idx), jnp.asarray(sec), num_sets=num_sets,
+                      slots=slots, filter_op=filter_op, engine="pallas")
+    np.testing.assert_array_equal(ri, np.asarray(st.indices))
+    np.testing.assert_array_equal(rp, np.asarray(st.positions))
+    np.testing.assert_array_equal(ra, np.asarray(st.active))
+    np.testing.assert_allclose(rs, np.asarray(st.secondary), rtol=1e-5, atol=1e-5)
+
+
 # ---------------------------------------------------------------------------
 # Segment merge kernel
 # ---------------------------------------------------------------------------
