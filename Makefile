@@ -4,26 +4,32 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-ci test-fast bench bench-quick bench-iru
+.PHONY: test test-ci test-fast bench bench-quick bench-iru bench-iru-quick
 
 test:
 	$(PY) -m pytest -x -q
 
-# CI gate: tier-1 minus the suites that require the not-yet-built repro.dist
-# module (see ROADMAP "Open items"); drop the ignores once it lands.
+# CI gate: tier-1 minus test_serving, whose continuous-batching parity
+# failures predate repro.dist and are tracked in ROADMAP "Open items"
+# (repro.dist itself landed, so models/distributed suites run here now).
 test-ci:
-	$(PY) -m pytest -x -q --ignore=tests/test_models.py \
-		--ignore=tests/test_serving.py --ignore=tests/test_distributed.py
+	$(PY) -m pytest -x -q --ignore=tests/test_serving.py
 
 test-fast:
 	$(PY) -m pytest -x -q tests/test_kernels.py tests/test_iru_core.py \
-		tests/test_iru_streaming.py tests/test_graph_apps.py
+		tests/test_iru_streaming.py tests/test_iru_banked.py \
+		tests/test_graph_apps.py
 
 bench:
 	$(PY) -m benchmarks.run
 
 bench-quick:
 	$(PY) -m benchmarks.run --quick --skip-moe
+	$(PY) -m benchmarks.iru_throughput --quick
+
+# engine-dispatch smoke at tiny sizes (sort/hash/banked/windowed/adversarial
+# rows all traced + executed once) — what the CI bench step runs
+bench-iru-quick:
 	$(PY) -m benchmarks.iru_throughput --quick
 
 bench-iru:

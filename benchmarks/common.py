@@ -54,12 +54,16 @@ def set_quick(flag: bool) -> None:
 def dataset_kw(name: str) -> dict:
     return (QUICK_DATASET_KW if _QUICK else DATASET_KW)[name]
 
-# The IRU hash geometry of the paper: 1024 sets x 32 slots (4 partitions).
+# The IRU hash geometry of the paper: 1024 sets x 32 slots, 4 partitions x
+# 2 banks (sets stripe as set % 4; each partition reorders its sub-stream
+# independently and emits partition-major).  round_cap bounds the occupancy
+# round peeling on adversarially skewed frontiers (hybrid dense fallback).
 # window_elems models the streaming lookahead: the hash drains under warp
 # pressure, so the reorder scope is the in-flight window, not the frontier
 # (~8 prefetches x 32 elems x 4 partitions of pipelining headroom + occupancy
 # => ~8k elements in flight).
-IRU_HASH = dict(num_sets=1024, slots=32, window_elems=8192)
+IRU_HASH = dict(num_sets=1024, slots=32, window_elems=8192,
+                n_partitions=4, n_banks=2, round_cap=64)
 
 
 def _run(algo: str, g, mode: str, recorder):

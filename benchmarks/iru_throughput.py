@@ -1,19 +1,48 @@
 """IRU reorder-engine throughput (elements/sec) across frontier sizes.
 
 Tracks the perf trajectory of the repo's hottest path: the reorder engines of
-``core.iru``.  Engines measured:
+``core.iru``.  Engine rows:
 
-  sort        — stable-sort engine (XLA argsort), jit steady-state
-  hash        — batch-parallel hash engine (kernels/iru_reorder/batched.py)
-  hash_w8192  — same, streamed through 8192-element lookahead windows
-  hash_ref    — vectorized numpy oracle (host fast path)
-  seed_ref    — seed element-sequential numpy oracle   (capped size)
-  seed_pallas — seed element-sequential Pallas interpret (capped size)
+  sort          — stable-sort engine (XLA argsort), jit steady-state
+  hash          — batch-parallel hash engine (kernels/iru_reorder/batched.py)
+  hash_w{w}     — windowed sweep: same engine through w-element lookahead
+                  windows (w in 2048 / 8192 / 32768)
+  hash_filter   — filter mode (merge-on-duplicate, ``filter_op="add"``) on a
+                  duplicate-heavy stream; sort_filter / hash_ref_filter are
+                  the comparison points
+  hash_p{P}     — partition sweep (P in 1/2/4/8) of the banked engine
+                  (kernels/iru_reorder/banked.py) on a hot-set graph frontier
+                  (uniform background + one burst of distinct blocks hashing
+                  to a single set, filter mode).  Partition-local occupancy
+                  rounds mean the round-peeling loop of the cold partitions
+                  stops early and the hot partition peels over ~n/P lanes
+                  instead of n — the banking win the paper's 4x2 geometry
+                  buys.  hash_p4_cap64 adds the round-cap hybrid fallback on
+                  the same stream.
+  adv_*         — adversarial single-set stream (every element a distinct
+                  block of ONE hash set): adv_sort is the sort engine,
+                  adv_hash_cap64 the banked engine with the round cap armed
+                  (capacity bypass -> flat -> dense fallback), and
+                  adv_hash_uncapped (small sizes only) documents the
+                  n/slots-round blowup the cap exists to prevent.
+  hash_ref      — vectorized numpy oracle (host fast path)
+  seed_ref      — seed element-sequential numpy oracle   (capped size)
+  seed_pallas   — seed element-sequential Pallas interpret (capped size)
+
+seed_pallas collapses superlinearly with n (2.0k el/s at 100k vs 33k at 1k in
+earlier runs).  That is an INTERPRET-MODE ARTIFACT, not a kernel regression:
+under CPU interpretation every ``pl.store`` into the [n]-sized output refs is
+a functional whole-buffer update, so per-element cost grows ~O(n) (measured
+steady-state: ~99us/elem at 4k -> ~313us/elem at 32k), plus ~2s of trace
+overhead at small n.  On TPU silicon the same stores are in-place VMEM
+writes.  The row is kept (capped) as the honest seed baseline; the JSON
+carries this note so the number is not misread.
 
 Writes ``BENCH_iru.json`` at the repo root so the numbers are versioned with
-the code.  The headline metric is ``speedup_hash_vs_seed_pallas_100k``: the
-batch-parallel engine vs the seed element-sequential path on a 100k-element
-stream (CPU).
+the code.  Headline metrics: ``speedup_hash_vs_seed_pallas_100k``,
+``partition_sweep_1m`` (the 1->8 scaling curve) and
+``adv_cap64_vs_sort_100k`` (the adversarial stream with the cap armed must
+stay within 2x of the sort engine).
 
     PYTHONPATH=src python -m benchmarks.iru_throughput            # full sweep
     PYTHONPATH=src python -m benchmarks.iru_throughput --quick    # CI-sized
@@ -30,77 +59,184 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.iru import IRUConfig, iru_reorder, reorder_frontier
-from repro.kernels.iru_reorder.ref import hash_reorder_ref
+from repro.kernels.iru_reorder.ref import hash_reorder_ref, hash_set
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_iru.json")
 
 GEOM = dict(num_sets=1024, slots=32)
 SIZES = (1_000, 10_000, 100_000, 1_000_000)
 QUICK_SIZES = (1_000, 10_000)
+WINDOW_SWEEP = (2_048, 8_192, 32_768)
+PART_SWEEP = (1, 2, 4, 8)
+# partition-sweep stream: hot burst of this many distinct blocks into one
+# set (~200 occupancy rounds at 32 slots) over a uniform background
+HOT_BURST = 6_400
 # element-sequential seed paths: one element at a time; keep sizes honest but
 # bounded so the sweep terminates
 SEED_CAP = 100_000
 SEED_PALLAS_CAP = 100_000
+ADV_UNCAPPED_CAP = 10_000
+
+SEED_PALLAS_NOTE = (
+    "seed_pallas throughput collapses superlinearly with n (interpret-mode "
+    "artifact, NOT a kernel regression): under CPU interpretation each "
+    "pl.store into the [n]-sized output refs is a functional whole-buffer "
+    "update, so per-element cost grows ~O(n) — measured ~99us/elem at 4k vs "
+    "~313us/elem at 32k steady-state. On TPU silicon the same stores are "
+    "in-place VMEM writes.")
 
 
 def _time(fn, *, min_time: float = 0.2, max_reps: int = 50,
           warmup: bool = True) -> float:
+    """Best-of-reps steady state (min is robust to the bursty background
+    contention of shared CI boxes; the mean of 2 reps is not)."""
     if warmup:
         fn()  # jit compile / caches
-    reps, total = 0, 0.0
+    reps, total, best = 0, 0.0, float("inf")
     while reps == 0 or (total < min_time and reps < max_reps):
         t0 = time.monotonic()
         fn()
-        total += time.monotonic() - t0
+        dt = time.monotonic() - t0
+        total += dt
+        best = min(best, dt)
         reps += 1
-    return total / reps
+    return best
 
 
-def _engines(n: int, quick: bool):
+def _same_set_indices(k: int, *, num_sets: int, target: int = 3,
+                      epb: int = 32) -> np.ndarray:
+    """k distinct int32 indices whose blocks all hash to one set.
+
+    Packs up to ``epb`` distinct indices per matching block so the stream
+    stays inside int32 for any k (a block id only needs to clear
+    ``k / (epb * num_sets)`` on average, far below ``2**31 / epb``)."""
+    blocks_needed = -(-k // epb)
+    out, start = [], 0
+    got = 0
+    while got < blocks_needed:
+        blocks = np.arange(start, start + 4_000_000, dtype=np.int64)
+        hit = blocks[hash_set(blocks, num_sets) == target]
+        out.append(hit)
+        got += hit.shape[0]
+        start += 4_000_000
+    blocks = np.concatenate(out)[:blocks_needed]
+    assert blocks[-1] * epb + epb - 1 < 2**31, "indices would overflow int32"
+    idx = (blocks[:, None] * epb + np.arange(epb)[None, :]).reshape(-1)[:k]
+    return idx.astype(np.int32)
+
+
+def _hotset_stream(n: int, rng: np.random.Generator) -> np.ndarray:
+    """Uniform frontier with a single-set burst: the round-skew workload the
+    partition sweep measures (hot vertices in a power-law graph frontier)."""
+    burst = min(HOT_BURST, max(n // 32, 2))
+    idx = rng.integers(0, n, n).astype(np.int32)
+    idx[rng.choice(n, burst, replace=False)] = _same_set_indices(
+        burst, num_sets=GEOM["num_sets"])
+    return idx
+
+
+def _rows(n: int, quick: bool):
+    """Yield (row_name, thunk, timing_kwargs) benchmark rows for size n."""
     rng = np.random.default_rng(n)
     idx_np = rng.integers(0, max(n, 2), n).astype(np.int32)
     idx = jnp.asarray(idx_np)
+    dup_np = rng.integers(0, max(n // 4, 2), n).astype(np.int32)
+    dup = jnp.asarray(dup_np)
+    vals = jnp.asarray(rng.random(n).astype(np.float32))
+    one = {}
+    slow = dict(min_time=0.0, max_reps=1)
 
-    sort_cfg = IRUConfig(mode="sort")
-    hash_cfg = IRUConfig(mode="hash", **GEOM)
-    hash_w_cfg = IRUConfig(mode="hash", window_elems=8192, **GEOM)
+    def jit_row(cfg, i=idx, v=None):
+        if v is None:
+            return lambda: iru_reorder(i, config=cfg).indices.block_until_ready()
+        return lambda: iru_reorder(i, v, config=cfg).indices.block_until_ready()
+
+    yield "sort", jit_row(IRUConfig(mode="sort")), one
+    yield "hash", jit_row(IRUConfig(mode="hash", **GEOM)), one
+    for w in WINDOW_SWEEP:
+        if n > w:
+            yield (f"hash_w{w}",
+                   jit_row(IRUConfig(mode="hash", window_elems=w, **GEOM)),
+                   one)
+
+    # filter-mode rows: duplicate-heavy stream, merge-on-duplicate
+    yield ("hash_filter",
+           jit_row(IRUConfig(mode="hash", filter_op="add", **GEOM), dup, vals),
+           slow if n >= 1_000_000 else one)
+    yield ("sort_filter",
+           jit_row(IRUConfig(mode="sort", filter_op="add"), dup, vals), one)
+    ref_filter_cfg = IRUConfig(mode="hash_ref", filter_op="add", **GEOM)
+    yield ("hash_ref_filter",
+           lambda: reorder_frontier(dup_np, np.asarray(vals),
+                                    config=ref_filter_cfg), one)
+
+    # partition sweep: banked engine on the hot-set frontier
+    if not (quick and n > 10_000):
+        hot_np = _hotset_stream(n, rng)
+        hot = jnp.asarray(hot_np)
+        for p in PART_SWEEP:
+            cfg = IRUConfig(mode="hash", filter_op="add", n_partitions=p,
+                            n_banks=2, **GEOM)
+            yield f"hash_p{p}", jit_row(cfg, hot, vals), slow
+        cap_cfg = IRUConfig(mode="hash", filter_op="add", n_partitions=4,
+                            n_banks=2, round_cap=64, **GEOM)
+        yield "hash_p4_cap64", jit_row(cap_cfg, hot, vals), slow
+
+    # adversarial single-set stream (round-count worst case)
+    if n <= SEED_CAP:
+        adv_np = rng.permutation(_same_set_indices(
+            n, num_sets=GEOM["num_sets"]))
+        adv = jnp.asarray(adv_np)
+        # several reps: the headline adv_cap64_vs_sort ratio should compare
+        # steady states, not whichever rep a noisy neighbor landed on
+        stable = dict(min_time=0.5)
+        yield ("adv_sort",
+               jit_row(IRUConfig(mode="sort", filter_op="add"), adv, vals),
+               stable)
+        yield ("adv_hash_cap64",
+               jit_row(IRUConfig(mode="hash", filter_op="add", n_partitions=4,
+                                 n_banks=2, round_cap=64, **GEOM), adv, vals),
+               stable)
+        if n <= ADV_UNCAPPED_CAP:
+            yield ("adv_hash_uncapped",
+                   jit_row(IRUConfig(mode="hash", filter_op="add", **GEOM),
+                           adv, vals),
+                   slow)
+
     ref_cfg = IRUConfig(mode="hash_ref", **GEOM)
-
-    yield "sort", lambda: iru_reorder(idx, config=sort_cfg).indices.block_until_ready()
-    yield "hash", lambda: iru_reorder(idx, config=hash_cfg).indices.block_until_ready()
-    if n > 8192:
-        yield "hash_w8192", lambda: iru_reorder(
-            idx, config=hash_w_cfg).indices.block_until_ready()
-    yield "hash_ref", lambda: reorder_frontier(idx_np, config=ref_cfg)
+    yield "hash_ref", lambda: reorder_frontier(idx_np, config=ref_cfg), one
     if n <= SEED_CAP and not (quick and n > 10_000):
-        yield "seed_ref", lambda: hash_reorder_ref(
-            idx_np, np.zeros(n, np.float32), **GEOM)
+        # one timed rep, no warmup double-run: the first call carries
+        # jit compile for seed_pallas but is dwarfed by the loop itself
+        seedkw = dict(min_time=0.0, max_reps=1, warmup=False)
+        yield ("seed_ref",
+               lambda: hash_reorder_ref(idx_np, np.zeros(n, np.float32),
+                                        **GEOM), seedkw)
         from repro.kernels.iru_reorder.ops import hash_reorder
 
-        yield "seed_pallas", lambda: hash_reorder(
-            idx, engine="pallas", **GEOM).indices.block_until_ready()
+        yield ("seed_pallas",
+               lambda: hash_reorder(idx, engine="pallas",
+                                    **GEOM).indices.block_until_ready(),
+               seedkw)
 
 
 def run(quick: bool = False) -> dict:
     sizes = QUICK_SIZES if quick else SIZES
     results: dict[str, dict[str, float]] = {}
     for n in sizes:
-        for name, fn in _engines(n, quick):
-            if name in ("seed_ref", "seed_pallas"):
-                # one timed rep, no warmup double-run: the first call carries
-                # jit compile for seed_pallas but is dwarfed by the loop itself
-                sec = _time(fn, min_time=0.0, max_reps=1, warmup=False)
-            else:
-                sec = _time(fn)
+        for name, fn, tkw in _rows(n, quick):
+            sec = _time(fn, **tkw)
             eps = n / sec if sec > 0 else float("inf")
             results.setdefault(name, {})[str(n)] = round(eps, 1)
-            print(f"n={n:>9,}  {name:<12} {sec*1e3:10.2f} ms   {eps:14,.0f} elem/s")
+            print(f"n={n:>9,}  {name:<16} {sec*1e3:10.2f} ms   "
+                  f"{eps:14,.0f} elem/s")
     out = {
         "metric": "elements_per_second",
         "backend": jax.default_backend(),
-        "geometry": GEOM,
+        "geometry": dict(GEOM, n_partitions_sweep=list(PART_SWEEP), n_banks=2),
         "sizes": list(sizes),
         "results": results,
+        "notes": {"seed_pallas": SEED_PALLAS_NOTE},
     }
     key = str(100_000)
     if key in results.get("hash", {}) and key in results.get("seed_pallas", {}):
@@ -109,9 +245,25 @@ def run(quick: bool = False) -> dict:
         out["speedup_hash_ref_vs_seed_ref_100k"] = round(
             results["hash_ref"][key] / results["seed_ref"][key], 1)
         print(f"\nhash vs seed_pallas @100k: "
-              f"{out['speedup_hash_vs_seed_pallas_100k']}x")
+              f"{out['speedup_hash_vs_seed_pallas_100k']}x   "
+              f"({SEED_PALLAS_NOTE.splitlines()[0]}...)")
         print(f"hash_ref vs seed_ref @100k: "
               f"{out['speedup_hash_ref_vs_seed_ref_100k']}x")
+    mkey = str(1_000_000)
+    if mkey in results.get("hash_p1", {}):
+        sweep = {str(p): results[f"hash_p{p}"][mkey] for p in PART_SWEEP}
+        out["partition_sweep_1m"] = sweep
+        curve = [sweep[str(p)] for p in PART_SWEEP]
+        out["partition_sweep_1m_monotone"] = bool(
+            all(a <= b for a, b in zip(curve, curve[1:])))
+        print(f"partition sweep @1M (el/s): {sweep}  "
+              f"monotone={out['partition_sweep_1m_monotone']}")
+    if key in results.get("adv_sort", {}):
+        ratio = round(results["adv_hash_cap64"][key]
+                      / results["adv_sort"][key], 2)
+        out["adv_cap64_vs_sort_100k"] = ratio
+        print(f"adversarial capped hash vs sort @100k: {ratio}x "
+              f"(>0.5 means within 2x of the sort engine)")
     return out
 
 

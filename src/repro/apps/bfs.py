@@ -4,6 +4,9 @@ The irregular access is the status/label lookup ``label[edge_frontier[i]]``.
 ``iru`` mode reorders the edge frontier with the IRU before the lookup —
 identical results, better-coalesced index stream (recorded for the cost
 model).  ``bfs_jit`` is a fixed-shape pure-JAX variant for jit contexts.
+``iru_config`` carries the full hash geometry including the banked
+``n_partitions`` / ``n_banks`` / ``round_cap`` knobs (paper: 4x2, see
+``benchmarks/common.IRU_HASH``).
 """
 from __future__ import annotations
 

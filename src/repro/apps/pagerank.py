@@ -7,6 +7,12 @@ coalesced atomics (PR shows the paper's largest speedups, 1.40x).
 
 ``pagerank`` is the trace-collecting host implementation; ``pagerank_jit``
 is the fully-jitted JAX path built on ``iru_scatter_add``.
+
+Pass the paper's banked geometry through ``iru_config``
+(``IRUConfig(n_partitions=4, n_banks=2, round_cap=64, ...)`` — what
+``benchmarks/common.IRU_HASH`` uses): contribution streams into hot
+destination vertices then reorder per partition, and adversarially skewed
+frontiers take the round-cap dense fallback instead of degrading.
 """
 from __future__ import annotations
 

@@ -3,6 +3,11 @@
 The irregular access is ``atomicMin(&label[edge], weight)``; the IRU merges
 duplicate destinations with int/fp-min at insert time, so merged-out lanes
 never issue their atomic (48.5% average filter rate in the paper).
+
+``iru_config`` accepts the banked geometry (``n_partitions`` / ``n_banks`` /
+``round_cap`` — see ``benchmarks/common.IRU_HASH`` for the paper's 4x2
+setting); relax-heavy frontiers with hot destinations are exactly the
+round-skewed streams partition-local reordering pays off on.
 """
 from __future__ import annotations
 

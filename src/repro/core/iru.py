@@ -29,9 +29,16 @@ Three reorder engines:
   imperfect coalescing under conflicts — the paper's actual design point.
   Backed by kernels/iru_reorder: the batch-parallel JAX engine by default
   (``config.engine="batched"``), or the element-sequential Pallas
-  behavioural twin (``"pallas"``).
+  behavioural twin (``"pallas"``).  ``n_partitions > 1`` selects the banked
+  generalization (the paper's 4-partition x 2-bank geometry): sets stripe
+  across partitions, each partition reorders independently (partition-local
+  occupancy rounds, optional ``shard_map`` sharding over devices) and the
+  stream emits partition-major.  ``round_cap`` arms the hybrid fallback for
+  adversarially skewed streams (see ``IRUConfig``).
 * ``mode="hash_ref"`` — the numpy oracle (vectorized fast path), identical
-  semantics with zero tracing; what host-side benchmark drivers use.
+  semantics with zero tracing; what host-side benchmark drivers use.  It
+  honors the same ``n_partitions`` / ``round_cap`` semantics through the
+  partitioned oracle in ``kernels/iru_reorder/ref.py``.
 
 Streaming windows (``config.window_elems=w``) model the hardware's bounded
 lookahead: the stream is processed in independent w-element windows.  Full
@@ -70,11 +77,31 @@ class IRUConfig:
     mode: Mode = "sort"
     filter_op: Optional[filt.FilterOp] = None
     compact: bool = True  # group disabled lanes at the tail (whole-warp disable)
-    # hash-engine geometry (paper: 1024 sets x 32 slots, 4 partitions)
+    # hash-engine geometry (paper: 1024 sets x 32 slots, 4 partitions x 2
+    # banks).  Sets stripe across partitions as ``set % n_partitions``; with
+    # ``n_partitions > 1`` the banked engine reorders each partition's
+    # sub-stream independently and emits partition-major (see
+    # kernels/iru_reorder/banked.py), which is also what ``hash_ref`` models
+    # via the partitioned numpy oracle.  ``n_banks`` is the intra-partition
+    # bank count — physical parallelism with no semantic effect on the
+    # stream; it only constrains the geometry (num_sets must split evenly
+    # into n_partitions * n_banks) and feeds modeled-throughput accounting.
     num_sets: int = 1024
     slots: int = 32
+    n_partitions: int = 1
+    n_banks: int = 2
+    # round-cap hybrid fallback (filter mode only): bounds the occupancy
+    # round peeling of the hash engine.  When the a-priori round bound
+    # ``max_set ceil(n_set / slots)`` of a (partition's) stream exceeds the
+    # cap — e.g. an adversarial stream hammering one set, which would
+    # otherwise degrade to n/slots sequential passes — that stream falls
+    # back to the dense sort-merge path.  Deterministic and mirrored by the
+    # numpy oracles (``ref.hash_reorder_ref_flat`` / ``_banked``).  None
+    # disables the fallback (pure paper semantics).
+    round_cap: Optional[int] = None
     # hash-engine realization: "batched" (batch-parallel round decomposition,
-    # default) or "pallas" (element-sequential behavioural twin)
+    # default; the banked generalization when n_partitions > 1) or "pallas"
+    # (element-sequential behavioural twin, single-partition only)
     engine: str = "batched"
     interpret: Optional[bool] = None  # None = auto (resolved in kernels ops)
     # bounded lookahead: the hardware IRU reorders a *streaming window* (hash
@@ -83,6 +110,23 @@ class IRUConfig:
     # this many elements — duplicates merge only within a window, exactly the
     # paper's "merges only elements found concurrently on the IRU" (§4.1).
     window_elems: Optional[int] = None
+
+    def __post_init__(self):
+        if self.n_partitions < 1 or self.n_banks < 1:
+            raise ValueError(
+                f"n_partitions/n_banks must be >= 1, got "
+                f"{self.n_partitions}/{self.n_banks}")
+        if self.num_sets % (self.n_partitions * self.n_banks) != 0:
+            raise ValueError(
+                f"num_sets={self.num_sets} must split evenly across "
+                f"{self.n_partitions} partitions x {self.n_banks} banks")
+        if self.round_cap is not None and self.round_cap < 1:
+            raise ValueError(f"round_cap must be >= 1, got {self.round_cap}")
+
+    @property
+    def bank_parallelism(self) -> int:
+        """Modeled parallel insert lanes (partitions x banks, paper §3.2)."""
+        return self.n_partitions * self.n_banks
 
 
 @jax.tree_util.register_dataclass
@@ -159,6 +203,8 @@ def _reorder_window(
             filter_op=config.filter_op,
             interpret=config.interpret,
             engine=config.engine,
+            n_partitions=config.n_partitions,
+            round_cap=config.round_cap,
         )
     else:
         raise ValueError(f"unknown IRU mode {config.mode!r}")
@@ -223,9 +269,12 @@ def _hash_ref_host(
 
     Host-side benchmark drivers run whole frontiers through this; it uses the
     vectorized ``hash_reorder_ref_vec`` fast path per window, so big frontiers
-    stop paying O(n) Python.
+    stop paying O(n) Python.  With ``n_partitions > 1`` or a ``round_cap``
+    each window routes through the partitioned/cap-aware oracle instead,
+    mirroring the banked engine decision for decision.
     """
-    from repro.kernels.iru_reorder.ref import hash_reorder_ref_vec
+    from repro.kernels.iru_reorder.ref import (
+        hash_reorder_ref_banked, hash_reorder_ref_vec)
 
     n = indices.shape[0]
     if n == 0:
@@ -233,13 +282,22 @@ def _hash_ref_host(
                 np.zeros((0,) + secondary.shape[1:], secondary.dtype),
                 np.zeros(0, np.int32), np.zeros(0, bool))
     w = config.window_elems if config.window_elems is not None else n
+    banked = config.n_partitions > 1 or config.round_cap is not None
     outs = []
     for s0 in range(0, n, w):
-        oi, osec, opos, oact = hash_reorder_ref_vec(
-            indices[s0 : s0 + w], secondary[s0 : s0 + w],
-            num_sets=config.num_sets, slots=config.slots,
-            elem_bytes=config.target_elem_bytes, block_bytes=config.block_bytes,
-            filter_op=config.filter_op)
+        if banked:
+            oi, osec, opos, oact = hash_reorder_ref_banked(
+                indices[s0 : s0 + w], secondary[s0 : s0 + w],
+                num_sets=config.num_sets, slots=config.slots,
+                elem_bytes=config.target_elem_bytes,
+                block_bytes=config.block_bytes, filter_op=config.filter_op,
+                n_partitions=config.n_partitions, round_cap=config.round_cap)
+        else:
+            oi, osec, opos, oact = hash_reorder_ref_vec(
+                indices[s0 : s0 + w], secondary[s0 : s0 + w],
+                num_sets=config.num_sets, slots=config.slots,
+                elem_bytes=config.target_elem_bytes,
+                block_bytes=config.block_bytes, filter_op=config.filter_op)
         opos = (opos + np.int32(s0)).astype(np.int32)
         # no compaction pass needed: the oracle already emits survivors at the
         # front and filtered lanes at the tail (compact would be the identity)

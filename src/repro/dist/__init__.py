@@ -1,0 +1,9 @@
+"""Distribution layer: logical-axis sharding resolution and collectives.
+
+``repro.dist.sharding`` turns the logical axis names attached to every
+parameter (see ``models.common.Initializer``) into concrete
+``PartitionSpec``s for a mesh, and carries the ambient-mesh context that
+activation sharding constraints (``models.common.constrain``) bind against.
+``repro.dist.collectives`` holds bandwidth-reduction collectives (int8
+gradient compression with error feedback, int8 all-reduce).
+"""

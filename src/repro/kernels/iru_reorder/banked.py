@@ -1,0 +1,194 @@
+"""Multi-partition banked IRU hash engine (paper §3.2: 4 partitions x 2 banks).
+
+The hardware IRU is not one monolithic hash: sets are striped across
+partitions (``partition = set % n_partitions``) and each partition reorders
+its share of the stream independently, in parallel banks.  This engine
+models that geometry on top of the flat batch-parallel machinery of
+``batched.py``:
+
+* one stable sort by ``(partition, set, stream order)`` buckets the stream
+  partition-major (the set-major sort the flat engine pays anyway, just on a
+  composite key);
+* elements scatter into a ``[n_partitions, capacity]`` bank buffer —
+  per-partition rows, already set-sorted, padded with inert lanes;
+* ``lax.map`` runs the per-partition reorder row by row, so the filter
+  path's occupancy-round loop trips only as many times as *that partition's*
+  max round count — a hot partition no longer stalls the cold ones, and each
+  partition applies its own ``round_cap`` fallback (``batched.py``) to the
+  dense merge path;
+* survivors re-emit partition-major: partition fronts first, filtered tails
+  last, matching ``ref.hash_reorder_ref_banked`` bit for bit.
+
+Two escape hatches keep the semantics total (both mirrored by the oracle):
+a stream whose partition counts exceed ``ref.partition_capacity`` (bank
+overflow — e.g. every element hashing to one set) bypasses banking through
+the flat engine via ``lax.cond``, and ``n_partitions=1`` *is* the flat
+engine.
+
+Multi-device: pass a mesh (see ``launch.mesh.make_iru_mesh``) and the row
+stage runs under ``shard_map`` with partitions sharded over the mesh axis —
+each device reorders its resident partitions only; the cheap partition-major
+combine stays global.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels.iru_reorder.batched import (
+    _assemble,
+    _reorder_presorted,
+    hash_reorder_batched,
+)
+from repro.kernels.iru_reorder.iru_reorder import _hash_set
+from repro.kernels.iru_reorder.ref import partition_capacity
+
+_INT32_MAX = jnp.int32(jnp.iinfo(jnp.int32).max)
+
+
+def _row_reorder(row, *, num_sets: int, slots: int,
+                 filter_op: Optional[str], round_cap: Optional[int]):
+    """Reorder one partition's (padded, set-sorted) bank row."""
+    I, V, Pos, S, valid = row
+    filtered, band, key, acc = _reorder_presorted(
+        I, V, Pos, S, valid,
+        num_sets=num_sets, slots=slots, filter_op=filter_op,
+        round_cap=round_cap)
+    oi, osec, opos, oact = _assemble(I, V, Pos, valid, filtered, band, key, acc)
+    n_filt = jnp.sum(filtered.astype(jnp.int32))
+    n_surv = jnp.sum((~filtered & valid).astype(jnp.int32))
+    return oi, osec, opos, oact, n_surv, n_filt
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_sets", "slots", "elem_bytes", "block_bytes",
+                     "filter_op", "n_partitions", "round_cap", "mesh"),
+)
+def hash_reorder_banked(
+    indices: jax.Array,
+    secondary: jax.Array,
+    *,
+    num_sets: int = 1024,
+    slots: int = 32,
+    elem_bytes: int = 4,
+    block_bytes: int = 128,
+    filter_op: Optional[str] = None,
+    n_partitions: int = 4,
+    round_cap: Optional[int] = None,
+    mesh=None,
+):
+    """Banked hash reorder; stream-identical to ``ref.hash_reorder_ref_banked``.
+
+    Returns ``(out_idx, out_sec, out_pos, out_act)`` arrays.
+    """
+    indices = indices.astype(jnp.int32)
+    n = indices.shape[0]
+    if mesh is not None and n_partitions <= 1:
+        raise ValueError(
+            "mesh sharding requires n_partitions > 1 (the mesh shards bank "
+            "rows; a single partition has nothing to shard)")
+    if n_partitions <= 1:
+        return hash_reorder_batched(
+            indices, secondary, num_sets=num_sets, slots=slots,
+            elem_bytes=elem_bytes, block_bytes=block_bytes,
+            filter_op=filter_op, round_cap=round_cap)
+    if num_sets % n_partitions != 0:
+        raise ValueError(
+            f"num_sets={num_sets} must divide evenly into "
+            f"n_partitions={n_partitions}")
+    if n == 0:
+        return (indices, secondary, jnp.zeros((0,), jnp.int32),
+                jnp.zeros((0,), jnp.bool_))
+
+    nP = n_partitions
+    C = partition_capacity(n, nP)
+    epb = block_bytes // elem_bytes
+    payload = secondary.shape[1:]
+
+    sets = _hash_set(indices // jnp.int32(epb), num_sets)
+    part = sets % jnp.int32(nP)
+    cnt = jnp.zeros((nP,), jnp.int32).at[part].add(1)
+    overflow = jnp.max(cnt) > jnp.int32(C)
+
+    row_fn = functools.partial(
+        _row_reorder, num_sets=num_sets, slots=slots, filter_op=filter_op,
+        round_cap=round_cap)
+
+    def rows_stage(rI, rV, rPos, rS, rValid):
+        return jax.lax.map(row_fn, (rI, rV, rPos, rS, rValid))
+
+    def banked_fn(_):
+        # composite key: partition-major, set-minor, stream-stable — the one
+        # big sort of the engine (the flat engine's set sort on a fused key).
+        # Built inside the branch so the capacity bypass never pays for it.
+        order = jnp.argsort(part * jnp.int32(num_sets) + sets, stable=True)
+        S = sets[order]
+        I = indices[order]
+        V = jnp.take(secondary, order, axis=0)
+        Pos = order.astype(jnp.int32)
+        Pa = part[order]
+        part_start = jnp.cumsum(cnt) - cnt
+        col = jnp.arange(n, dtype=jnp.int32) - part_start[Pa]
+
+        # bank buffers: per-partition rows, set-sorted, inert padding at tail
+        rc = (Pa, col)
+        rI = jnp.full((nP, C), -1, jnp.int32).at[rc].set(I, mode="drop")
+        rV = jnp.zeros((nP, C) + payload, secondary.dtype).at[rc].set(
+            V, mode="drop")
+        rPos = jnp.full((nP, C), _INT32_MAX).at[rc].set(Pos, mode="drop")
+        rS = jnp.full((nP, C), num_sets, jnp.int32).at[rc].set(S, mode="drop")
+        rValid = jnp.zeros((nP, C), jnp.bool_).at[rc].set(
+            jnp.ones((n,), jnp.bool_), mode="drop")
+        if mesh is None:
+            oi, osec, opos, oact, m, f = rows_stage(rI, rV, rPos, rS, rValid)
+        else:
+            from repro.launch.shardings import iru_partition_axis
+
+            axis = iru_partition_axis(mesh)
+            sharded = shard_map(
+                rows_stage, mesh=mesh,
+                in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis)),
+                out_specs=(P(axis), P(axis), P(axis), P(axis),
+                           P(axis), P(axis)),
+                check_rep=False,
+            )
+            oi, osec, opos, oact, m, f = sharded(rI, rV, rPos, rS, rValid)
+        # partition-major combine: fronts [0, sum m), tails [n - sum f, n)
+        front_off = jnp.cumsum(m) - m
+        tail_off = jnp.cumsum(f) - f
+        F = jnp.sum(f)
+        cols = jnp.arange(C, dtype=jnp.int32)[None, :]
+        in_front = cols < m[:, None]
+        in_tail = cols >= jnp.int32(C) - f[:, None]
+        g = jnp.where(
+            in_front, front_off[:, None] + cols,
+            jnp.where(in_tail,
+                      (jnp.int32(n) - F) + tail_off[:, None]
+                      + (cols - (jnp.int32(C) - f[:, None])),
+                      jnp.int32(n)))  # padding lanes scatter out of range
+        g = g.reshape(-1)
+        out_idx = jnp.zeros((n,), jnp.int32).at[g].set(
+            oi.reshape(-1), mode="drop")
+        out_sec = jnp.zeros((n,) + payload, secondary.dtype).at[g].set(
+            osec.reshape((nP * C,) + payload), mode="drop")
+        out_pos = jnp.zeros((n,), jnp.int32).at[g].set(
+            opos.reshape(-1), mode="drop")
+        out_act = jnp.zeros((n,), jnp.bool_).at[g].set(
+            oact.reshape(-1), mode="drop")
+        return out_idx, out_sec, out_pos, out_act
+
+    def flat_fn(_):
+        # bank capacity exceeded (adversarially skewed stream): bypass
+        # banking entirely — same rule as the oracle
+        return hash_reorder_batched(
+            indices, secondary, num_sets=num_sets, slots=slots,
+            elem_bytes=elem_bytes, block_bytes=block_bytes,
+            filter_op=filter_op, round_cap=round_cap)
+
+    return jax.lax.cond(overflow, flat_fn, banked_fn, None)

@@ -22,11 +22,27 @@ This engine produces the exact same stream with *batch-parallel dataflow*:
   (set, index, round) group carries the segment reduction of the group's
   payloads (scatter-add/min/max keyed by group leader).
 
-A direct vector-width batching of the insert loop (process B elements per
-step, sequential fallback on intra-batch set conflicts) was tried first and
-benched slower: realistic graph frontiers keep sets near-full occupancy, so
-flush-crossing conflicts dominate and the fallback serializes most batches.
-Round decomposition has no sequential element path at all.
+``round_cap`` (the hybrid fallback, ROADMAP "round-peeling worst case"):
+adversarial streams that hammer one set degrade the filter path to
+``n / slots`` sequential passes.  With a cap, the engine bounds the round
+count up front — each full round consumes at least ``slots`` elements of its
+set, so ``max_set ceil(n_set / slots)`` bounds the trip count — and when
+that bound exceeds the cap it switches (``lax.cond``, so only the taken
+branch executes) to the *dense merge* path: stable sort by index, one
+survivor per unique index carrying the segment-reduced payload, duplicates
+filtered at detection.  The switch is a deterministic function of the input
+(mirrored by ``ref.hash_reorder_ref_flat``), never a heuristic.
+
+The module is factored so the multi-partition banked engine (``banked.py``)
+can reuse the per-stream machinery on pre-sorted, possibly padded rows:
+
+* :func:`_reorder_presorted` — the round/merge decomposition over a stream
+  that is already set-major sorted, with a ``valid`` lane mask (padding
+  lanes are inert and emit last);
+* :func:`_assemble` — the shared emission layout: survivors at the front
+  grouped by (band, key) — flushes by trigger stream position, then drains
+  by set id, then padding — and filtered elements closing the tail in
+  reverse detection order.
 
 Output layout matches ``ref.hash_reorder_ref`` exactly: survivors at the
 front in emission order, filtered elements at the tail in reverse detection
@@ -43,14 +59,18 @@ import jax.numpy as jnp
 
 from repro.kernels.iru_reorder.iru_reorder import _hash_set
 
+# emission bands: front groups order by (band, local_key, stream pos)
+BAND_FLUSH = jnp.int32(0)   # key = stream position of the flush trigger
+BAND_DRAIN = jnp.int32(1)   # key = set id (dense path: index value)
+BAND_PAD = jnp.int32(2)     # padding lanes of banked rows; dropped by caller
+_BAND_FILTERED = jnp.int32(3)  # assembly-internal: filtered close the tail
+
+_INT32_MAX = jnp.int32(jnp.iinfo(jnp.int32).max)
+
 
 def _pex(mask: jax.Array, ref: jax.Array) -> jax.Array:
     """Broadcast a lane mask across trailing payload dims of ``ref``."""
     return mask.reshape(mask.shape + (1,) * (ref.ndim - mask.ndim))
-
-
-def _excl_cumsum(x: jax.Array) -> jax.Array:
-    return jnp.cumsum(x) - x
 
 
 def _seg_scatter(seg_id: jax.Array, values: jax.Array, n: int) -> jax.Array:
@@ -58,10 +78,268 @@ def _seg_scatter(seg_id: jax.Array, values: jax.Array, n: int) -> jax.Array:
     return jnp.zeros((n,), values.dtype).at[seg_id].add(values)
 
 
+def _scatter_merge(V: jax.Array, tgt: jax.Array, filter_op: str) -> jax.Array:
+    """Fold every lane of ``V`` into ``V[tgt]`` with the filter op
+    (out-of-range targets drop — the idiom for 'only filtered lanes fold')."""
+    if filter_op == "add":
+        return V.at[tgt].add(V, mode="drop")
+    if filter_op == "min":
+        return V.at[tgt].min(V, mode="drop")
+    if filter_op == "max":
+        return V.at[tgt].max(V, mode="drop")
+    raise ValueError(filter_op)
+
+
+def _segment_fields(S: jax.Array):
+    """Per-set segment bookkeeping over a set-major sorted stream."""
+    n = S.shape[0]
+    ar = jnp.arange(n, dtype=jnp.int32)
+    new_seg = jnp.concatenate([jnp.ones((1,), jnp.bool_), S[1:] != S[:-1]])
+    seg_id = jnp.cumsum(new_seg.astype(jnp.int32)) - 1
+    seg_start = jax.lax.cummax(jnp.where(new_seg, ar, 0))
+    rank = ar - seg_start                        # within-set arrival rank
+    # per-segment arrays live in [n]-sized slots indexed by seg_id
+    seg_len = _seg_scatter(seg_id, jnp.ones((n,), jnp.int32), n)
+    seg_set = _seg_scatter(seg_id, jnp.where(new_seg, S, 0), n)
+    seg_startA = _seg_scatter(seg_id, jnp.where(new_seg, ar, 0), n)
+    return ar, new_seg, seg_id, rank, seg_len, seg_set, seg_startA
+
+
+def _keys_nofilter(S, Pos, ar, new_seg, rank, *, slots: int):
+    """Closed-form round boundaries: every ``slots`` arrivals flush."""
+    n = S.shape[0]
+    g_new = new_seg | (rank % slots == 0)
+    gid = jnp.cumsum(g_new.astype(jnp.int32)) - 1
+    g_size = _seg_scatter(gid, jnp.ones((n,), jnp.int32), n)
+    g_startA = _seg_scatter(gid, jnp.where(g_new, ar, 0), n)
+    g_last = jnp.clip(g_startA + g_size - 1, 0, n - 1)
+    full = g_size == slots
+    g_band = jnp.where(full, BAND_FLUSH, BAND_DRAIN)
+    g_key = jnp.where(full, Pos[g_last],
+                      _seg_scatter(gid, jnp.where(g_new, S, 0), n))
+    filtered = jnp.zeros((n,), jnp.bool_)
+    return filtered, g_band[gid], g_key[gid]
+
+
+def _keys_hash_filter(I, Pos, valid, seg_fields, psr, *, slots: int):
+    """Round peeling: one vectorized pass over all sets per round generation.
+
+    ``psr[i]`` is the within-set rank of the previous same-(set, index)
+    element (−1 if none / padding); an element is filtered exactly when that
+    rank falls inside the current round.
+    """
+    n = I.shape[0]
+    ar, new_seg, seg_id, rank, seg_len, seg_set, seg_startA = seg_fields
+    BIG = jnp.int32(n + 1)
+
+    def cond(state):
+        return jnp.any(state[1])
+
+    def body(state):
+        cur, seg_active, round_of, filtered, band, key, r = state
+        un = round_of < 0
+        dup = un & (psr >= cur[seg_id])
+        keep = un & ~dup
+        kc = jnp.cumsum(keep.astype(jnp.int32))
+        kcb = kc - keep.astype(jnp.int32)    # keeps strictly before pos
+        base = kcb[jnp.clip(seg_startA + cur, 0, n - 1)]  # per segment
+        local = kc - base[seg_id]            # keep count within round
+        trig_mask = keep & (local == slots)
+        trigR = jnp.full((n,), BIG, jnp.int32).at[seg_id].min(
+            jnp.where(trig_mask, rank, BIG))
+        flushed = seg_active & (trigR < BIG)
+        lim = jnp.where(flushed, trigR, BIG)[seg_id]
+        take = un & seg_active[seg_id] & (rank <= lim)
+        round_of = jnp.where(take, r, round_of)
+        filtered = filtered | (take & dup)
+        tpos = jnp.clip(seg_startA + trigR, 0, n - 1)
+        bandA = jnp.where(flushed, BAND_FLUSH, BAND_DRAIN)
+        keyA = jnp.where(flushed, Pos[tpos], seg_set)
+        band = jnp.where(take & keep, bandA[seg_id], band)
+        key = jnp.where(take & keep, keyA[seg_id], key)
+        cur = jnp.where(flushed, trigR + 1, cur)
+        seg_active = flushed & (cur < seg_len)
+        return cur, seg_active, round_of, filtered, band, key, r + 1
+
+    state = (jnp.zeros((n,), jnp.int32),
+             jnp.zeros((n,), jnp.bool_).at[seg_id].set(valid),
+             jnp.where(valid, jnp.int32(-1), jnp.int32(0)),
+             jnp.zeros((n,), jnp.bool_),
+             jnp.zeros((n,), jnp.int32),
+             jnp.zeros((n,), jnp.int32),
+             jnp.int32(0))
+    _, _, round_of, filtered, band, key, _ = jax.lax.while_loop(
+        cond, body, state)
+    return filtered, band, key, round_of
+
+
+def _merge_payloads(I, V, S, rank, round_of, filtered, filter_op: str):
+    """Fold each filtered element into the surviving leader of its
+    (set, index, round) group — a segment reduction."""
+    n = I.shape[0]
+    ar = jnp.arange(n, dtype=jnp.int32)
+    o3 = jnp.lexsort((rank, round_of, I, S))
+    S3, I3, R3 = S[o3], I[o3], round_of[o3]
+    lead_new = jnp.concatenate([
+        jnp.ones((1,), jnp.bool_),
+        (S3[1:] != S3[:-1]) | (I3[1:] != I3[:-1]) | (R3[1:] != R3[:-1])])
+    g3 = jnp.cumsum(lead_new.astype(jnp.int32)) - 1
+    lead_pos = _seg_scatter(g3, jnp.where(lead_new, o3, 0), n)
+    leader_of = jnp.zeros((n,), jnp.int32).at[o3].set(lead_pos[g3])
+    return _scatter_merge(V, jnp.where(filtered, leader_of, n), filter_op)
+
+
+def _keys_dense_merge(I, V, Pos, valid, filter_op: str):
+    """Dense fallback: one survivor per unique index, sorted by index value.
+
+    The "infinite-patience" reorder of the sub-stream — what the sort engine
+    would do — expressed in the hash engine's output conventions: survivors
+    at the front ordered by (index, arrival), duplicates filtered at
+    detection and folded into their survivor by a segment reduction.
+    """
+    n = I.shape[0]
+    # padding lanes sort last and never form duplicate runs
+    Ik = jnp.where(valid, I, _INT32_MAX)
+    o2 = jnp.lexsort((Pos, Ik))
+    run_new = jnp.concatenate([
+        jnp.ones((1,), jnp.bool_), (Ik[o2][1:] != Ik[o2][:-1])])
+    run_new = run_new | ~valid[o2]
+    rid = jnp.cumsum(run_new.astype(jnp.int32)) - 1
+    lead_pos = _seg_scatter(rid, jnp.where(run_new, o2, 0), n)
+    leader_of = jnp.zeros((n,), jnp.int32).at[o2].set(lead_pos[rid])
+    first = jnp.zeros((n,), jnp.bool_).at[o2].set(run_new)
+    filtered = valid & ~first
+    acc = _scatter_merge(V, jnp.where(filtered, leader_of, n), filter_op)
+    band = jnp.full((n,), BAND_FLUSH)
+    key = Ik
+    # round_of is unused downstream for the dense path; return zeros
+    return filtered, band, key, acc
+
+
+def _reorder_presorted(
+    I: jax.Array,
+    V: jax.Array,
+    Pos: jax.Array,
+    S: jax.Array,
+    valid: jax.Array,
+    *,
+    num_sets: int,
+    slots: int,
+    filter_op: Optional[str],
+    round_cap: Optional[int] = None,
+):
+    """Round/merge decomposition over one set-major sorted (padded) stream.
+
+    ``S`` must be non-decreasing with padding lanes (``valid=False``) at the
+    tail carrying ``S = num_sets``.  Returns per-lane ``(filtered, band,
+    local_key, acc)`` for :func:`_assemble`; padding lanes come back with
+    ``band == BAND_PAD`` and ``filtered == False``.
+    """
+    seg_fields = _segment_fields(S)
+    ar, new_seg, seg_id, rank, seg_len, seg_set, _ = seg_fields
+
+    if filter_op is None:
+        filtered, band, key = _keys_nofilter(
+            S, Pos, ar, new_seg, rank, slots=slots)
+        acc = V
+    else:
+        n = I.shape[0]
+
+        def hash_path(_):
+            # psr[i] = within-set rank of previous same-(set, index) element
+            # (computed inside the branch: the dense path never needs it)
+            o2 = jnp.lexsort((rank, I, S))
+            o2_prev = jnp.concatenate([o2[:1], o2[:-1]])
+            run_new = jnp.concatenate([
+                jnp.ones((1,), jnp.bool_),
+                (S[o2][1:] != S[o2][:-1]) | (I[o2][1:] != I[o2][:-1])])
+            psr = jnp.zeros((n,), jnp.int32).at[o2].set(
+                jnp.where(run_new, -1, rank[o2_prev]))
+            psr = jnp.where(valid, psr, -1)
+            filtered, band, key, round_of = _keys_hash_filter(
+                I, Pos, valid, seg_fields, psr, slots=slots)
+            acc = _merge_payloads(I, V, S, rank, round_of, filtered, filter_op)
+            return filtered, band, key, acc
+
+        if round_cap is None:
+            filtered, band, key, acc = hash_path(None)
+        else:
+            # each full round consumes >= slots elements of its set, so the
+            # per-set ceil(len / slots) bounds the trip count a priori
+            seg_rounds = jnp.where(seg_set < num_sets,
+                                   (seg_len + slots - 1) // slots, 0)
+            r_ub = jnp.max(seg_rounds) if n else jnp.int32(0)
+            filtered, band, key, acc = jax.lax.cond(
+                r_ub > round_cap,
+                lambda _: _keys_dense_merge(I, V, Pos, valid, filter_op),
+                hash_path,
+                None)
+    band = jnp.where(valid, band, BAND_PAD)
+    filtered = filtered & valid
+    return filtered, band, key, acc
+
+
+def _assemble(I, V, Pos, valid, filtered, band, key, acc):
+    """Shared emission layout over one (padded) stream of length L.
+
+    Survivors occupy the front ordered by (band, key, stream position) —
+    flushes by trigger position, drains by set id, padding last among the
+    non-filtered; filtered lanes close the tail in reverse detection order.
+    Returns ``(out_idx, out_sec, out_pos, out_act)`` plus the filtered
+    count so banked callers can split front/tail regions.
+    """
+    L = I.shape[0]
+    ar = jnp.arange(L, dtype=jnp.int32)
+    band_eff = jnp.where(filtered, _BAND_FILTERED, band)
+    em = jnp.lexsort((Pos, key, band_eff))
+    front_pos = jnp.zeros((L,), jnp.int32).at[em].set(ar)
+    fo = jnp.lexsort((jnp.where(filtered, Pos, _INT32_MAX),))
+    frank = jnp.zeros((L,), jnp.int32).at[fo].set(ar)
+    out_position = jnp.where(filtered, L - 1 - frank, front_pos)
+
+    out_idx = jnp.zeros((L,), jnp.int32).at[out_position].set(I)
+    out_sec = jnp.zeros((L,) + V.shape[1:], V.dtype).at[out_position].set(
+        jnp.where(_pex(filtered, V), V, acc))
+    out_pos = jnp.zeros((L,), jnp.int32).at[out_position].set(Pos)
+    out_act = jnp.zeros((L,), jnp.bool_).at[out_position].set(
+        ~filtered & valid)
+    return out_idx, out_sec, out_pos, out_act
+
+
+def _dense_merge_flat(indices: jax.Array, secondary: jax.Array,
+                      filter_op: str):
+    """Whole-stream dense fallback, direct form (one argsort, no emission
+    sorts): the output positions of ``dense_merge_ref`` are closed-form —
+    survivors take their rank among survivors in (index, arrival) order,
+    duplicates take the tail in reverse detection (stream) order."""
+    n = indices.shape[0]
+    ar = jnp.arange(n, dtype=jnp.int32)
+    o = jnp.argsort(indices, stable=True)
+    I2 = indices[o]
+    run_new = jnp.concatenate([jnp.ones((1,), jnp.bool_), I2[1:] != I2[:-1]])
+    rid = jnp.cumsum(run_new.astype(jnp.int32)) - 1
+    lead_pos = _seg_scatter(rid, jnp.where(run_new, o, 0), n)
+    leader_of = jnp.zeros((n,), jnp.int32).at[o].set(lead_pos[rid])
+    first = jnp.zeros((n,), jnp.bool_).at[o].set(run_new)
+    filtered = ~first
+    acc = _scatter_merge(secondary, jnp.where(filtered, leader_of, n),
+                         filter_op)
+    surv_rank = jnp.cumsum(run_new.astype(jnp.int32)) - 1    # per sorted pos
+    pos_of = jnp.zeros((n,), jnp.int32).at[o].set(surv_rank)
+    frank = jnp.cumsum(filtered.astype(jnp.int32)) - 1       # stream order
+    out_position = jnp.where(filtered, n - 1 - frank, pos_of)
+    out_idx = jnp.zeros((n,), jnp.int32).at[out_position].set(indices)
+    out_sec = jnp.zeros_like(secondary).at[out_position].set(
+        jnp.where(_pex(filtered, secondary), secondary, acc))
+    out_pos = jnp.zeros((n,), jnp.int32).at[out_position].set(ar)
+    out_act = jnp.zeros((n,), jnp.bool_).at[out_position].set(~filtered)
+    return out_idx, out_sec, out_pos, out_act
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("num_sets", "slots", "elem_bytes", "block_bytes",
-                     "filter_op"),
+                     "filter_op", "round_cap"),
 )
 def hash_reorder_batched(
     indices: jax.Array,
@@ -72,129 +350,44 @@ def hash_reorder_batched(
     elem_bytes: int = 4,
     block_bytes: int = 128,
     filter_op: Optional[str] = None,
+    round_cap: Optional[int] = None,
 ):
-    """Batch-parallel hash reorder; stream-identical to ``hash_reorder_ref``.
+    """Batch-parallel hash reorder; stream-identical to ``hash_reorder_ref``
+    (``ref.hash_reorder_ref_flat`` when ``round_cap`` is set).
 
     Returns ``(out_idx, out_sec, out_pos, out_act)`` arrays.
     """
     indices = indices.astype(jnp.int32)
     n = indices.shape[0]
     epb = block_bytes // elem_bytes
-    payload = secondary.shape[1:]
     if n == 0:
         return (indices, secondary, jnp.zeros((0,), jnp.int32),
                 jnp.zeros((0,), jnp.bool_))
 
-    ar = jnp.arange(n, dtype=jnp.int32)
     sets = _hash_set(indices // jnp.int32(epb), num_sets)
-    order = jnp.argsort(sets, stable=True)       # set-major, stream order kept
-    S = sets[order]
-    I = indices[order]
-    V = jnp.take(secondary, order, axis=0)
-    new_seg = jnp.concatenate([jnp.ones((1,), jnp.bool_), S[1:] != S[:-1]])
-    seg_id = jnp.cumsum(new_seg.astype(jnp.int32)) - 1
-    seg_start = jax.lax.cummax(jnp.where(new_seg, ar, 0))
-    rank = ar - seg_start                        # within-set arrival rank
-    # per-segment arrays live in [n]-sized slots indexed by seg_id
-    seg_len = _seg_scatter(seg_id, jnp.ones((n,), jnp.int32), n)
-    seg_set = _seg_scatter(seg_id, jnp.where(new_seg, S, 0), n)
-    BIG = jnp.int32(n + num_sets + 1)
 
-    if filter_op is None:
-        filtered = jnp.zeros((n,), jnp.bool_)
-        # closed form: round boundary every `slots` arrivals
-        g_new = new_seg | (rank % slots == 0)
-        gid = jnp.cumsum(g_new.astype(jnp.int32)) - 1
-        g_size = _seg_scatter(gid, jnp.ones((n,), jnp.int32), n)
-        g_startA = _seg_scatter(gid, jnp.where(g_new, ar, 0), n)
-        g_last = jnp.clip(g_startA + g_size - 1, 0, n - 1)
-        full = g_size == slots
-        # emission key: flushes by trigger stream position, then drains by set
-        g_key = jnp.where(full, order[g_last], n + _seg_scatter(
-            gid, jnp.where(g_new, S, 0), n))
-        grp_key = g_key[gid]                     # per element
-        acc = V
-    else:
-        # prev_same[i] = within-set rank of previous same-(set, index) element
-        o2 = jnp.lexsort((rank, I, S))
-        o2_prev = jnp.concatenate([o2[:1], o2[:-1]])
-        run_new = jnp.concatenate([
-            jnp.ones((1,), jnp.bool_),
-            (S[o2][1:] != S[o2][:-1]) | (I[o2][1:] != I[o2][:-1])])
-        psr = jnp.zeros((n,), jnp.int32).at[o2].set(
-            jnp.where(run_new, -1, rank[o2_prev]))
+    def hash_fn(_):
+        order = jnp.argsort(sets, stable=True)   # set-major, stream order kept
+        S = sets[order]
+        I = indices[order]
+        V = jnp.take(secondary, order, axis=0)
+        Pos = order.astype(jnp.int32)
+        valid = jnp.ones((n,), jnp.bool_)
+        filtered, band, key, acc = _reorder_presorted(
+            I, V, Pos, S, valid,
+            num_sets=num_sets, slots=slots, filter_op=filter_op,
+            round_cap=None)  # the cap decision already happened below
+        return _assemble(I, V, Pos, valid, filtered, band, key, acc)
 
-        def cond(state):
-            return jnp.any(state[1])
-
-        seg_startA = _seg_scatter(seg_id, jnp.where(new_seg, ar, 0), n)
-
-        def body(state):
-            cur, seg_active, round_of, filtered, grp_key, r = state
-            un = round_of < 0
-            dup = un & (psr >= cur[seg_id])
-            keep = un & ~dup
-            kc = jnp.cumsum(keep.astype(jnp.int32))
-            kcb = kc - keep.astype(jnp.int32)    # keeps strictly before pos
-            base = kcb[jnp.clip(seg_startA + cur, 0, n - 1)]  # per segment
-            local = kc - base[seg_id]            # keep count within round
-            trig_mask = keep & (local == slots)
-            trigR = jnp.full((n,), BIG, jnp.int32).at[seg_id].min(
-                jnp.where(trig_mask, rank, BIG))
-            flushed = seg_active & (trigR < BIG)
-            lim = jnp.where(flushed, trigR, BIG)[seg_id]
-            take = un & seg_active[seg_id] & (rank <= lim)
-            round_of = jnp.where(take, r, round_of)
-            filtered = filtered | (take & dup)
-            tpos = jnp.clip(seg_startA + trigR, 0, n - 1)
-            keyA = jnp.where(flushed, order[tpos], n + seg_set)
-            grp_key = jnp.where(take & keep, keyA[seg_id], grp_key)
-            cur = jnp.where(flushed, trigR + 1, cur)
-            seg_active = flushed & (cur < seg_len)
-            return cur, seg_active, round_of, filtered, grp_key, r + 1
-
-        state = (jnp.zeros((n,), jnp.int32),
-                 jnp.zeros((n,), jnp.bool_).at[seg_id].set(True),
-                 jnp.full((n,), -1, jnp.int32),
-                 jnp.zeros((n,), jnp.bool_),
-                 jnp.zeros((n,), jnp.int32),
-                 jnp.int32(0))
-        _, _, round_of, filtered, grp_key, _ = jax.lax.while_loop(
-            cond, body, state)
-
-        # merge payloads: each filtered element folds into the surviving
-        # leader of its (set, index, round) group — a segment reduction
-        o3 = jnp.lexsort((rank, round_of, I, S))
-        S3, I3, R3 = S[o3], I[o3], round_of[o3]
-        lead_new = jnp.concatenate([
-            jnp.ones((1,), jnp.bool_),
-            (S3[1:] != S3[:-1]) | (I3[1:] != I3[:-1]) | (R3[1:] != R3[:-1])])
-        g3 = jnp.cumsum(lead_new.astype(jnp.int32)) - 1
-        lead_pos = _seg_scatter(g3, jnp.where(lead_new, o3, 0), n)
-        leader_of = jnp.zeros((n,), jnp.int32).at[o3].set(lead_pos[g3])
-        tgt = jnp.where(filtered, leader_of, n)
-        if filter_op == "add":
-            acc = V.at[tgt].add(V, mode="drop")
-        elif filter_op == "min":
-            acc = V.at[tgt].min(V, mode="drop")
-        elif filter_op == "max":
-            acc = V.at[tgt].max(V, mode="drop")
-        else:
-            raise ValueError(filter_op)
-
-    # ---- emission layout (shared by both paths) ----
-    # survivors: grouped by grp_key (flushes by trigger position, drains by
-    # set id), insertion order inside a group; filtered elements close the
-    # tail in reverse detection order.
-    em = jnp.lexsort((ar, jnp.where(filtered, BIG, grp_key)))
-    front_pos = jnp.zeros((n,), jnp.int32).at[em].set(ar)
-    fo = jnp.lexsort((jnp.where(filtered, order, BIG),))
-    frank = jnp.zeros((n,), jnp.int32).at[fo].set(ar)
-    out_position = jnp.where(filtered, n - 1 - frank, front_pos)
-
-    out_idx = jnp.zeros((n,), jnp.int32).at[out_position].set(I)
-    out_sec = jnp.zeros((n,) + payload, secondary.dtype).at[out_position].set(
-        jnp.where(_pex(filtered, V), V, acc))
-    out_pos = jnp.zeros((n,), jnp.int32).at[out_position].set(order.astype(jnp.int32))
-    out_act = jnp.zeros((n,), jnp.bool_).at[out_position].set(~filtered)
-    return out_idx, out_sec, out_pos, out_act
+    if filter_op is None or round_cap is None:
+        return hash_fn(None)
+    # round-cap hybrid: the trip-count bound is one bincount away, so decide
+    # before paying the set sort — the dense fallback needs neither it nor
+    # any emission sort
+    counts = jnp.zeros((num_sets,), jnp.int32).at[sets].add(1)
+    r_ub = jnp.max((counts + slots - 1) // slots)
+    return jax.lax.cond(
+        r_ub > round_cap,
+        lambda _: _dense_merge_flat(indices, secondary, filter_op),
+        hash_fn,
+        None)

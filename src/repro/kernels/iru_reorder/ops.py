@@ -1,13 +1,23 @@
 """Public wrapper around the IRU hash-reorder engines.
 
-Two engines, identical semantics (both validated against ``ref.py``):
+Three engines, identical semantics (all validated against ``ref.py``):
 
 * ``engine="batched"`` — batch-parallel pure-JAX pipeline (``batched.py``);
   the default everywhere: orders of magnitude faster on CPU, lowers to
-  TPU-native scatters unchanged.
+  TPU-native scatters unchanged.  With ``n_partitions > 1`` the
+  multi-partition banked generalization (``banked.py``) runs instead:
+  sets stripe across partitions, each partition reorders independently
+  (optionally ``shard_map``-sharded over a mesh) and the output is
+  partition-major — the paper's 4x2 banking geometry.
 * ``engine="pallas"``  — the element-sequential Pallas kernel
   (``iru_reorder.py``), the behavioural twin of the hardware dataflow; kept
-  for TPU-lowering validation and as the cycle-accurate reference.
+  for TPU-lowering validation and as the cycle-accurate reference.  It
+  models a single partition only.
+
+``round_cap`` bounds the filter path's occupancy-round peeling: streams
+whose round-count bound exceeds the cap take the dense sort-merge fallback
+(see ``batched.py``), which is also what the oracle predicts — the cap is
+semantics, not a heuristic.
 
 ``interpret`` auto-detection lives HERE and only here (:func:`resolve_interpret`):
 ``None`` means "interpret everywhere except a real TPU backend", so the same
@@ -46,6 +56,9 @@ def hash_reorder(
     filter_op: Optional[str] = None,
     interpret: Optional[bool] = None,
     engine: Engine = "batched",
+    n_partitions: int = 1,
+    round_cap: Optional[int] = None,
+    mesh=None,
 ):
     """Paper-faithful O(n) bounded reorder. Returns an ``IRUStream``."""
     from repro.core.iru import IRUStream  # late import: core imports us lazily
@@ -53,20 +66,41 @@ def hash_reorder(
     if secondary is None:
         secondary = jnp.zeros(indices.shape, jnp.float32)
     if engine == "batched":
-        out = hash_reorder_batched(
-            indices,
-            secondary,
-            num_sets=num_sets,
-            slots=slots,
-            elem_bytes=elem_bytes,
-            block_bytes=block_bytes,
-            filter_op=filter_op,
-        )
+        if n_partitions > 1 or mesh is not None:
+            from repro.kernels.iru_reorder.banked import hash_reorder_banked
+
+            out = hash_reorder_banked(
+                indices,
+                secondary,
+                num_sets=num_sets,
+                slots=slots,
+                elem_bytes=elem_bytes,
+                block_bytes=block_bytes,
+                filter_op=filter_op,
+                n_partitions=n_partitions,
+                round_cap=round_cap,
+                mesh=mesh,
+            )
+        else:
+            out = hash_reorder_batched(
+                indices,
+                secondary,
+                num_sets=num_sets,
+                slots=slots,
+                elem_bytes=elem_bytes,
+                block_bytes=block_bytes,
+                filter_op=filter_op,
+                round_cap=round_cap,
+            )
     elif engine == "pallas":
         if secondary.ndim != 1:
             raise NotImplementedError(
                 "the pallas engine carries scalar payloads only; "
                 "use engine='batched' for [n, k] secondaries")
+        if n_partitions > 1 or round_cap is not None:
+            raise NotImplementedError(
+                "the pallas engine is the single-partition behavioural twin; "
+                "use engine='batched' for n_partitions > 1 / round_cap")
         out = hash_reorder_pallas(
             indices,
             secondary,

@@ -39,6 +39,32 @@ Two implementations with identical outputs:
                               stream order).
 
 Both accept 1-D ``[n]`` or 2-D ``[n, k]`` secondary payloads.
+
+Multi-partition banking (paper §3.2: 4 partitions x 2 banks) adds three more
+oracles with the same output conventions:
+
+* ``dense_merge_ref``        — the round-cap hybrid fallback: the
+                               "infinite-patience" sort-merge of a stream in
+                               hash-layout clothing (survivors front sorted
+                               by index, duplicates tail, merged payloads).
+* ``hash_reorder_ref_flat``  — one partition with the ``round_cap`` rule:
+                               when ``max_set ceil(n_set / slots)`` exceeds
+                               the cap (a bound on the occupancy-round
+                               count), the whole stream takes the dense
+                               path; otherwise plain hash semantics.
+* ``hash_reorder_ref_banked``— the partitioned unit: elements shard by
+                               ``set % n_partitions``; each partition's
+                               sub-stream reorders independently (with its
+                               own round-cap decision) and the output is
+                               partition-major — survivor sections first,
+                               filtered tails last, both in partition order.
+                               A partition whose sub-stream would overflow
+                               its bank capacity (``partition_capacity``)
+                               bypasses banking: the whole stream takes the
+                               single-partition path.
+
+These are the bit-exactness contracts for the JAX engines in ``batched.py``
+and ``banked.py``.
 """
 from __future__ import annotations
 
@@ -287,3 +313,182 @@ def hash_reorder_ref_vec(
         out_pos[tail_slots] = orig.astype(np.int32)
     assert m == n - t
     return out_idx, out_sec, out_pos, out_act
+
+
+# ---------------------------------------------------------------------------
+# Multi-partition banking + round-cap hybrid oracles
+# ---------------------------------------------------------------------------
+
+def partition_capacity(n: int, n_partitions: int) -> int:
+    """Static per-partition bank capacity for an n-element stream.
+
+    A balanced hash sends ~``n / P`` elements to each partition; the bank
+    buffer carries 25% headroom (at least 64 lanes) so benign skew never
+    trips the bypass.  Shared by the numpy oracle and the JAX banked engine
+    so the capacity-overflow decision is part of the semantics, not a
+    per-engine heuristic.
+    """
+    if n_partitions <= 1:
+        return n
+    per = -(-n // n_partitions)
+    return min(n, per + max(64, per // 4))
+
+
+def max_round_bound(
+    indices: np.ndarray, *, num_sets: int, slots: int,
+    elem_bytes: int = 4, block_bytes: int = 128,
+) -> int:
+    """Upper bound on the occupancy-round count of a stream.
+
+    Every full round consumes at least ``slots`` elements of its set
+    (fillers plus same-round duplicates), so ``ceil(n_set / slots)`` bounds
+    the rounds of each set and the max over sets bounds the filter-path
+    while-loop trip count.  Cheap (one bincount), computable before any
+    round is peeled — this is the quantity the round cap compares against.
+    """
+    indices = np.asarray(indices, np.int32)
+    if indices.shape[0] == 0:
+        return 0
+    epb = block_bytes // elem_bytes
+    sets = hash_set(indices // np.int32(epb), num_sets)
+    counts = np.bincount(sets, minlength=num_sets)
+    return int(-(-counts.max() // slots))
+
+
+def dense_merge_ref(
+    indices: np.ndarray,
+    secondary: np.ndarray,
+    *,
+    filter_op: str | None = None,
+):
+    """Round-cap fallback semantics: sort-merge in hash-layout conventions.
+
+    Survivors occupy the front sorted by (index value, arrival); with a
+    filter op every later duplicate folds into the first occurrence (merge
+    applied in stream order) and parks at the tail in reverse detection
+    order.  Without a filter op nothing is filtered — the output is simply
+    the stable index sort.
+    """
+    indices = np.asarray(indices, np.int32)
+    secondary = np.asarray(secondary)
+    n = indices.shape[0]
+    payload = secondary.shape[1:]
+    out_idx = np.zeros(n, np.int32)
+    out_sec = np.zeros((n,) + payload, secondary.dtype)
+    out_pos = np.zeros(n, np.int32)
+    out_act = np.zeros(n, bool)
+    if n == 0:
+        return out_idx, out_sec, out_pos, out_act
+
+    o = np.argsort(indices, kind="stable")      # (index value, arrival)
+    if filter_op is None:
+        out_idx[:] = indices[o]
+        out_sec[:] = secondary[o]
+        out_pos[:] = o.astype(np.int32)
+        out_act[:] = True
+        return out_idx, out_sec, out_pos, out_act
+
+    I2 = indices[o]
+    run_new = np.empty(n, bool)
+    run_new[0] = True
+    run_new[1:] = I2[1:] != I2[:-1]
+    rid = np.cumsum(run_new) - 1
+    leaders = o[np.flatnonzero(run_new)]        # stream pos of each survivor
+    leader_of = leaders[rid]                    # sorted pos -> leader stream pos
+    first = np.zeros(n, bool)
+    first[o] = run_new
+    dup_stream = np.flatnonzero(~first)         # detection (stream) order
+
+    acc = secondary.copy()
+    tgt = leader_of[np.argsort(o)][dup_stream]  # leader stream pos per dup
+    vals = secondary[dup_stream]
+    if filter_op == "add":
+        np.add.at(acc, tgt, vals)
+    elif filter_op == "min":
+        np.minimum.at(acc, tgt, vals)
+    elif filter_op == "max":
+        np.maximum.at(acc, tgt, vals)
+    else:
+        raise ValueError(filter_op)
+
+    surv = leaders
+    m = surv.shape[0]
+    out_idx[:m] = indices[surv]
+    out_sec[:m] = acc[surv]
+    out_pos[:m] = surv.astype(np.int32)
+    out_act[:m] = True
+    t = dup_stream.shape[0]
+    if t:
+        tail_slots = n - 1 - np.arange(t)
+        out_idx[tail_slots] = indices[dup_stream]
+        out_sec[tail_slots] = secondary[dup_stream]
+        out_pos[tail_slots] = dup_stream.astype(np.int32)
+    assert m == n - t
+    return out_idx, out_sec, out_pos, out_act
+
+
+def hash_reorder_ref_flat(
+    indices: np.ndarray,
+    secondary: np.ndarray,
+    *,
+    num_sets: int = 1024,
+    slots: int = 32,
+    elem_bytes: int = 4,
+    block_bytes: int = 128,
+    filter_op: str | None = None,
+    round_cap: int | None = None,
+):
+    """Single-partition oracle with the round-cap hybrid rule applied."""
+    if (filter_op is not None and round_cap is not None
+            and max_round_bound(indices, num_sets=num_sets, slots=slots,
+                                elem_bytes=elem_bytes,
+                                block_bytes=block_bytes) > round_cap):
+        return dense_merge_ref(indices, secondary, filter_op=filter_op)
+    return hash_reorder_ref_vec(
+        indices, secondary, num_sets=num_sets, slots=slots,
+        elem_bytes=elem_bytes, block_bytes=block_bytes, filter_op=filter_op)
+
+
+def hash_reorder_ref_banked(
+    indices: np.ndarray,
+    secondary: np.ndarray,
+    *,
+    num_sets: int = 1024,
+    slots: int = 32,
+    elem_bytes: int = 4,
+    block_bytes: int = 128,
+    filter_op: str | None = None,
+    n_partitions: int = 4,
+    round_cap: int | None = None,
+):
+    """Partitioned oracle: ``set % n_partitions`` sharding, partition-major
+    emission, per-partition round-cap fallback, capacity bypass."""
+    indices = np.asarray(indices, np.int32)
+    secondary = np.asarray(secondary)
+    n = indices.shape[0]
+
+    def flat(idx, sec):
+        return hash_reorder_ref_flat(
+            idx, sec, num_sets=num_sets, slots=slots, elem_bytes=elem_bytes,
+            block_bytes=block_bytes, filter_op=filter_op, round_cap=round_cap)
+
+    if n_partitions <= 1 or n == 0:
+        return flat(indices, secondary)
+
+    epb = block_bytes // elem_bytes
+    part = hash_set(indices // np.int32(epb), num_sets) % n_partitions
+    counts = np.bincount(part, minlength=n_partitions)
+    if counts.max() > partition_capacity(n, n_partitions):
+        return flat(indices, secondary)          # bank capacity bypass
+
+    fronts, tails = [], []
+    for p in range(n_partitions):
+        sel = np.flatnonzero(part == p).astype(np.int32)
+        oi, osec, opos, oact = flat(indices[sel], secondary[sel])
+        opos = sel[opos]                          # local -> global positions
+        m = int(oact.sum())
+        fronts.append((oi[:m], osec[:m], opos[:m], oact[:m]))
+        tails.append((oi[m:], osec[m:], opos[m:], oact[m:]))
+    parts = fronts + tails
+    return tuple(np.concatenate([q[i] for q in parts], axis=0)
+                 for i in range(4))

@@ -167,6 +167,9 @@ def _measure(cfg_v: ModelConfig, pcfg: ParallelConfig, shape: ShapeConfig,
         t_compile = time.monotonic() - t0 - t_lower
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        # older jax returns one dict per partition; newer returns the dict
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else None
         hlo = compiled.as_text()
         del compiled, lowered
     coll = hlo_stats.collective_stats(hlo, n_dev)

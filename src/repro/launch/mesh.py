@@ -18,3 +18,20 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """Single-device mesh for CPU smoke tests."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_iru_mesh(n_partitions: int = 4):
+    """1-D mesh for the banked IRU engine's ``shard_map`` row stage.
+
+    Partitions shard over the ``part`` axis, so the axis size must divide
+    ``n_partitions``; this picks the largest such device count available
+    (e.g. 4 partitions on 8 devices -> 4-device mesh, on 1 device -> the
+    degenerate 1-device mesh, which is how single-host tests exercise the
+    multi-device code path).
+    """
+    import numpy as np
+
+    devices = jax.devices()
+    d = max(k for k in range(1, min(n_partitions, len(devices)) + 1)
+            if n_partitions % k == 0)
+    return jax.sharding.Mesh(np.asarray(devices[:d]), ("part",))

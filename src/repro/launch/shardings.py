@@ -67,6 +67,22 @@ def state_shardings(state_shapes, param_specs, mesh: Mesh, *,
 
 
 # ---------------------------------------------------------------------------
+# Banked-IRU shardings (kernels/iru_reorder/banked.py row stage)
+# ---------------------------------------------------------------------------
+
+def iru_partition_axis(mesh: Mesh) -> str:
+    """The mesh axis banked-IRU partitions shard over (its leading axis).
+
+    The single source of truth for the convention: the banked engine's
+    ``shard_map`` row stage (``kernels/iru_reorder/banked.py``) resolves the
+    axis through this helper, so host code building shardings for bank
+    buffers (``PartitionSpec(iru_partition_axis(mesh))`` on the leading
+    ``[n_partitions, ...]`` dim) stays in lockstep with it.
+    """
+    return next(iter(mesh.shape))
+
+
+# ---------------------------------------------------------------------------
 # Per-arch parallel configuration (dry-run defaults; §Perf iterates on these)
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,261 @@
+"""Multi-partition banked engine + round-cap hybrid fallback tests.
+
+Contracts covered:
+  * the banked JAX engine is stream-identical (indices / positions / active
+    bit-identical, payloads up to fp reduction order) to the partitioned
+    numpy oracle across partition counts, filter ops, [n] and [n, k]
+    payloads, windowed streaming, jit and vmap;
+  * adversarial streams (all-one-set, two-hot-sets, zipf-skewed) that blow
+    past the round cap take the dense fallback on BOTH sides and still match
+    bit for bit;
+  * the capacity-overflow bypass (every element in one partition) and the
+    n_partitions=1 degenerate case reduce to the flat engine;
+  * the shard_map row stage produces the same stream on a real multi-device
+    mesh (subprocess with 4 virtual CPU devices).
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.iru import IRUConfig, iru_reorder, reorder_frontier
+from repro.kernels.iru_reorder.banked import hash_reorder_banked
+from repro.kernels.iru_reorder.ref import (
+    hash_reorder_ref,
+    hash_reorder_ref_banked,
+    hash_reorder_ref_flat,
+    hash_set,
+    max_round_bound,
+    partition_capacity,
+)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _assert_stream_equal(got, ref, rtol=1e-5):
+    gi, gs, gp, ga = [np.asarray(x) for x in got]
+    ri, rs, rp, ra = ref
+    np.testing.assert_array_equal(ri, gi)
+    np.testing.assert_array_equal(rp, gp)
+    np.testing.assert_array_equal(ra, ga)
+    np.testing.assert_allclose(rs, gs, rtol=rtol, atol=1e-6)
+
+
+def _same_set_indices(n, *, num_sets, target_set=3, epb=32):
+    """n distinct indices all hashing to one set (round-count worst case)."""
+    out, block = [], 0
+    while len(out) < n:
+        if int(hash_set(np.asarray(block), num_sets)) == target_set:
+            out.append(block * epb)
+        block += 1
+    return np.asarray(out, np.int32)
+
+
+# ---------------------------------------------------------------------------
+# banked engine vs partitioned oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_partitions", [1, 2, 4, 8])
+@pytest.mark.parametrize("filter_op", [None, "add", "min", "max"])
+def test_banked_matches_partitioned_oracle(n_partitions, filter_op):
+    rng = np.random.default_rng(17 * n_partitions)
+    idx = rng.integers(0, 3000, 1500).astype(np.int32)
+    sec = rng.random(1500).astype(np.float32)
+    kw = dict(num_sets=32, slots=8, filter_op=filter_op,
+              n_partitions=n_partitions, round_cap=16)
+    got = hash_reorder_banked(jnp.asarray(idx), jnp.asarray(sec), **kw)
+    _assert_stream_equal(got, hash_reorder_ref_banked(idx, sec, **kw))
+
+
+@pytest.mark.parametrize("filter_op", [None, "add", "min"])
+def test_banked_2d_payloads(filter_op):
+    rng = np.random.default_rng(9)
+    idx = rng.integers(0, 400, 600).astype(np.int32)
+    sec = rng.random((600, 3)).astype(np.float32)
+    kw = dict(num_sets=16, slots=4, filter_op=filter_op, n_partitions=4,
+              round_cap=8)
+    got = hash_reorder_banked(jnp.asarray(idx), jnp.asarray(sec), **kw)
+    _assert_stream_equal(got, hash_reorder_ref_banked(idx, sec, **kw))
+    assert got[1].dtype == jnp.float32
+
+
+def test_banked_single_partition_is_flat_engine():
+    rng = np.random.default_rng(3)
+    idx = rng.integers(0, 500, 700).astype(np.int32)
+    sec = rng.random(700).astype(np.float32)
+    one = hash_reorder_banked(jnp.asarray(idx), jnp.asarray(sec),
+                              num_sets=32, slots=8, n_partitions=1,
+                              filter_op="add")
+    ref = hash_reorder_ref(idx, sec, num_sets=32, slots=8, filter_op="add")
+    _assert_stream_equal(one, ref)
+
+
+def test_banked_jit_and_vmap_safe():
+    rng = np.random.default_rng(11)
+    cfg = IRUConfig(mode="hash", num_sets=16, slots=4, filter_op="add",
+                    n_partitions=4, n_banks=2, round_cap=8)
+    batch = rng.integers(0, 120, (4, 90)).astype(np.int32)
+
+    @jax.jit
+    def f(i):
+        st = iru_reorder(i, config=cfg)
+        return st.indices, st.positions, st.active
+
+    vm = jax.vmap(lambda i: iru_reorder(i, config=cfg).indices)(
+        jnp.asarray(batch))
+    for b in range(batch.shape[0]):
+        ref = hash_reorder_ref_banked(
+            batch[b], np.zeros(90, np.float32), num_sets=16, slots=4,
+            filter_op="add", n_partitions=4, round_cap=8)
+        ji, jp, ja = f(jnp.asarray(batch[b]))
+        # config.compact reorders nothing here: oracle output is pre-compacted
+        np.testing.assert_array_equal(np.asarray(ji), ref[0])
+        np.testing.assert_array_equal(np.asarray(jp), ref[2])
+        np.testing.assert_array_equal(np.asarray(ja), ref[3])
+        np.testing.assert_array_equal(np.asarray(vm[b]), ref[0])
+
+
+@pytest.mark.parametrize("w", [128, 333])
+def test_banked_windowed_streaming(w):
+    rng = np.random.default_rng(w)
+    idx = rng.integers(0, 800, 1000).astype(np.int32)
+    vals = rng.random(1000).astype(np.float32)
+    cfg_h = IRUConfig(mode="hash", num_sets=32, slots=8, filter_op="min",
+                      n_partitions=4, round_cap=8, window_elems=w)
+    cfg_r = dataclasses.replace(cfg_h, mode="hash_ref")
+    a = reorder_frontier(idx, vals, config=cfg_h)
+    b = reorder_frontier(idx, vals, config=cfg_r)
+    _assert_stream_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# adversarial streams: the round-cap hybrid fallback
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("filter_op", ["add", "min"])
+def test_all_one_set_stream_takes_dense_fallback(filter_op):
+    num_sets, slots, cap = 16, 4, 4
+    rng = np.random.default_rng(0)
+    # shuffled so stream order differs from index order (otherwise the dense
+    # sort-by-index and the conflict-free hash emission coincide)
+    idx = rng.permutation(_same_set_indices(512, num_sets=num_sets))
+    # every element lands in one set: the round bound explodes past the cap
+    assert max_round_bound(idx, num_sets=num_sets, slots=slots) > cap
+    sec = rng.random(idx.shape[0]).astype(np.float32)
+    kw = dict(num_sets=num_sets, slots=slots, filter_op=filter_op,
+              n_partitions=4, round_cap=cap)
+    got = hash_reorder_banked(jnp.asarray(idx), jnp.asarray(sec), **kw)
+    _assert_stream_equal(got, hash_reorder_ref_banked(idx, sec, **kw))
+    # and the fallback really changes the stream vs the uncapped engine
+    uncapped = hash_reorder_ref_banked(idx, sec, **{**kw, "round_cap": None})
+    assert not np.array_equal(np.asarray(got[0]), uncapped[0])
+
+
+def test_two_hot_sets_fallback_is_per_partition():
+    """Two set-colliding families: hot partitions fall back, the rest keep
+    pure hash semantics — all bit-identical to the oracle."""
+    num_sets, slots, cap = 16, 4, 3
+    hot_a = _same_set_indices(300, num_sets=num_sets, target_set=1)
+    hot_b = _same_set_indices(300, num_sets=num_sets, target_set=6)
+    rng = np.random.default_rng(1)
+    cold = rng.integers(0, 10_000, 400).astype(np.int32)
+    idx = np.empty(1000, np.int32)
+    idx[0::2] = np.concatenate([hot_a, hot_b[:200]])
+    idx[1::2] = np.concatenate([hot_b[200:], cold])
+    sec = rng.random(1000).astype(np.float32)
+    kw = dict(num_sets=num_sets, slots=slots, filter_op="add",
+              n_partitions=4, round_cap=cap)
+    got = hash_reorder_banked(jnp.asarray(idx), jnp.asarray(sec), **kw)
+    _assert_stream_equal(got, hash_reorder_ref_banked(idx, sec, **kw))
+
+
+def test_zipf_skewed_stream_matches_oracle():
+    rng = np.random.default_rng(7)
+    idx = (rng.zipf(1.2, 2000) % 500).astype(np.int32)
+    sec = rng.random(2000).astype(np.float32)
+    for cap in (2, 8, None):
+        kw = dict(num_sets=16, slots=4, filter_op="add", n_partitions=4,
+                  round_cap=cap)
+        got = hash_reorder_banked(jnp.asarray(idx), jnp.asarray(sec), **kw)
+        _assert_stream_equal(got, hash_reorder_ref_banked(idx, sec, **kw))
+
+
+def test_capacity_overflow_bypasses_banking():
+    """All elements in one partition -> bank capacity exceeded -> the whole
+    stream takes the flat single-partition path (same rule as the oracle)."""
+    num_sets = 16
+    idx = _same_set_indices(800, num_sets=num_sets)
+    n = idx.shape[0]
+    part = hash_set(idx // np.int32(32), num_sets) % 4
+    counts = np.bincount(part, minlength=4)
+    assert counts.max() > partition_capacity(n, 4)  # scenario sanity
+    sec = np.random.default_rng(2).random(n).astype(np.float32)
+    kw = dict(num_sets=num_sets, slots=4, filter_op="add", n_partitions=4,
+              round_cap=8)
+    got = hash_reorder_banked(jnp.asarray(idx), jnp.asarray(sec), **kw)
+    ref = hash_reorder_ref_banked(idx, sec, **kw)
+    flat = hash_reorder_ref_flat(idx, sec, num_sets=num_sets, slots=4,
+                                 filter_op="add", round_cap=8)
+    _assert_stream_equal(got, ref)
+    np.testing.assert_array_equal(ref[0], flat[0])  # bypass == flat rule
+
+
+def test_round_cap_config_validation():
+    with pytest.raises(ValueError):
+        IRUConfig(num_sets=30, n_partitions=4)
+    with pytest.raises(ValueError):
+        IRUConfig(round_cap=0)
+    with pytest.raises(ValueError):
+        IRUConfig(n_partitions=0)
+    assert IRUConfig(n_partitions=4, n_banks=2).bank_parallelism == 8
+
+
+def test_pallas_engine_rejects_partitions():
+    from repro.kernels.iru_reorder.ops import hash_reorder
+
+    with pytest.raises(NotImplementedError):
+        hash_reorder(jnp.zeros((8,), jnp.int32), num_sets=16, slots=4,
+                     engine="pallas", n_partitions=4)
+
+
+# ---------------------------------------------------------------------------
+# multi-device shard_map row stage
+# ---------------------------------------------------------------------------
+
+def test_banked_shard_map_multi_device_parity():
+    code = """
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.launch.mesh import make_iru_mesh
+        from repro.kernels.iru_reorder.banked import hash_reorder_banked
+        from repro.kernels.iru_reorder.ref import hash_reorder_ref_banked
+        assert len(jax.devices()) == 4, jax.devices()
+        mesh = make_iru_mesh(4)
+        assert mesh.shape["part"] == 4
+        rng = np.random.default_rng(3)
+        idx = rng.integers(0, 2000, 4000).astype(np.int32)
+        sec = rng.random(4000).astype(np.float32)
+        kw = dict(num_sets=64, slots=8, filter_op="min", n_partitions=4,
+                  round_cap=16)
+        a = hash_reorder_banked(jnp.asarray(idx), jnp.asarray(sec),
+                                mesh=mesh, **kw)
+        b = hash_reorder_ref_banked(idx, sec, **kw)
+        np.testing.assert_array_equal(np.asarray(a[0]), b[0])
+        np.testing.assert_array_equal(np.asarray(a[2]), b[2])
+        np.testing.assert_array_equal(np.asarray(a[3]), b[3])
+        np.testing.assert_allclose(np.asarray(a[1]), b[1], rtol=1e-6)
+        print("OK")
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env, cwd=ROOT,
+                       timeout=900)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-4000:]}"
+    assert "OK" in r.stdout

@@ -6,8 +6,6 @@ import jax.numpy as jnp
 import pytest
 from jax.sharding import Mesh, PartitionSpec as P
 
-pytest.importorskip("repro.dist.sharding",
-                    reason="repro.dist not built yet (see ROADMAP open items)")
 from repro.dist.sharding import resolve_spec, zero_fragment
 from repro.launch import hlo_stats
 

@@ -13,8 +13,6 @@ from repro.configs.base import ParallelConfig, ShapeConfig
 from repro.data.pipeline import DataConfig, make_batch, synthetic_stream
 from repro.ckpt import CheckpointManager, latest_step, restore_checkpoint, save_checkpoint
 
-pytest.importorskip("repro.dist.collectives",
-                    reason="repro.dist not built yet (see ROADMAP open items)")
 from repro.dist.collectives import compress_grads_int8_ef
 from repro.ft import FaultInjector, FaultPlan, Supervisor, SupervisorConfig
 from repro.optim.adamw import (
