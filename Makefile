@@ -4,21 +4,22 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-ci test-fast bench bench-quick bench-iru bench-iru-quick
+.PHONY: test test-ci test-fast bench bench-quick bench-iru bench-iru-quick \
+	bench-apps-quick smoke-pipeline
 
 test:
 	$(PY) -m pytest -x -q
 
-# CI gate: tier-1 minus test_serving, whose continuous-batching parity
-# failures predate repro.dist and are tracked in ROADMAP "Open items"
-# (repro.dist itself landed, so models/distributed suites run here now).
+# CI gate == tier-1 (the serving continuous-batching parity failure is
+# fixed — async pos-buffer aliasing in serve/engine.py — so the full suite
+# runs here again).
 test-ci:
-	$(PY) -m pytest -x -q --ignore=tests/test_serving.py
+	$(PY) -m pytest -x -q
 
 test-fast:
 	$(PY) -m pytest -x -q tests/test_kernels.py tests/test_iru_core.py \
 		tests/test_iru_streaming.py tests/test_iru_banked.py \
-		tests/test_graph_apps.py
+		tests/test_graph_apps.py tests/test_pipeline.py
 
 bench:
 	$(PY) -m benchmarks.run
@@ -34,3 +35,12 @@ bench-iru-quick:
 
 bench-iru:
 	$(PY) -m benchmarks.iru_throughput
+
+# app-level pipeline-vs-host rows only (small kron graph, no JSON write)
+bench-apps-quick:
+	$(PY) -m benchmarks.iru_throughput --apps-only --quick --no-write
+
+# one pipeline BFS step on a small rmat graph through the interpret-mode
+# Pallas expansion gather + a whole-run parity check — the CI smoke
+smoke-pipeline:
+	$(PY) -m benchmarks.pipeline_smoke

@@ -25,6 +25,19 @@ Tracks the perf trajectory of the repo's hottest path: the reorder engines of
                   (capacity bypass -> flat -> dense fallback), and
                   adv_hash_uncapped (small sizes only) documents the
                   n/slots-round blowup the cap exists to prevent.
+  hash_p4_vmap  — the same 4-partition banked run with ``bank_map="vmap"``
+                  (jax.vmap over bank rows instead of lax.map; ROADMAP open
+                  item — the notes record which wins on this backend)
+  {kron,delaunay}_frontier_*
+                — real-graph frontier replay: the concatenated BFS edge
+                  frontiers of a Table-3-like graph (the paper's actual
+                  index streams, hub-skewed for kron / planar-local for
+                  delaunay) through sort / hash / banked-hash engines
+  app_{bfs,sssp,pr}_{host,pipe}
+                — whole-app wall clock (edges relaxed per second): the host
+                  per-iteration loop (hash_ref oracle reorder) vs the
+                  device-resident FrontierPipeline (one compiled
+                  lax.while_loop, banked hash engine) on a kron graph
   hash_ref      — vectorized numpy oracle (host fast path)
   seed_ref      — seed element-sequential numpy oracle   (capped size)
   seed_pallas   — seed element-sequential Pallas interpret (capped size)
@@ -50,6 +63,7 @@ stay within 2x of the sort engine).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import time
@@ -84,6 +98,21 @@ SEED_PALLAS_NOTE = (
     "update, so per-element cost grows ~O(n) — measured ~99us/elem at 4k vs "
     "~313us/elem at 32k steady-state. On TPU silicon the same stores are "
     "in-place VMEM writes.")
+
+APP_ROWS_NOTE = (
+    "app_* rows compare three realizations of the same traversal at the "
+    "paper 4x2 geometry: _host = host loop + numpy-oracle reorder "
+    "(hash_ref), _hostdev = host loop + the device hash engine (one "
+    "device round trip per iteration), _pipe = FrontierPipeline (same "
+    "device engine, whole run in ONE compiled lax.while_loop, zero host "
+    "work between iterations). On this CPU backend the numpy oracle is "
+    "still fastest at these sizes (same effect as the seed_pallas note); "
+    "the apples-to-apples device comparison is _pipe vs _hostdev. The "
+    "pipeline matches or beats _hostdev on all-edges apps (PageRank) and "
+    "pays the static edge-capacity tax on sparse-frontier levels "
+    "(BFS/SSSP touch all capacity lanes every level) — the standard "
+    "dense-frontier tradeoff; on accelerators the removed per-iteration "
+    "dispatch+transfer dominates instead.")
 
 
 def _time(fn, *, min_time: float = 0.2, max_reps: int = 50,
@@ -181,6 +210,9 @@ def _rows(n: int, quick: bool):
         cap_cfg = IRUConfig(mode="hash", filter_op="add", n_partitions=4,
                             n_banks=2, round_cap=64, **GEOM)
         yield "hash_p4_cap64", jit_row(cap_cfg, hot, vals), slow
+        vmap_cfg = IRUConfig(mode="hash", filter_op="add", n_partitions=4,
+                             n_banks=2, bank_map="vmap", **GEOM)
+        yield "hash_p4_vmap", jit_row(vmap_cfg, hot, vals), slow
 
     # adversarial single-set stream (round-count worst case)
     if n <= SEED_CAP:
@@ -220,9 +252,125 @@ def _rows(n: int, quick: bool):
                seedkw)
 
 
-def run(quick: bool = False) -> dict:
+def _bfs_edge_frontiers(g) -> np.ndarray:
+    """Concatenated per-level BFS edge frontiers from the max-degree source
+    — the traversal's actual irregular index stream (paper Fig. 2), exactly
+    as the app itself records it through the TraceRecorder hook."""
+    from repro.apps.bfs import bfs
+    from repro.apps.trace import TraceRecorder
+
+    source = int(np.argmax(np.asarray(g.degrees())))
+    rec = TraceRecorder()
+    bfs(g, source, recorder=rec)
+    return np.concatenate([idx for idx, _, _ in rec.events]).astype(np.int32)
+
+
+def frontier_rows(results: dict, quick: bool) -> None:
+    """Real-graph frontier replay: engine throughput on BFS edge streams."""
+    from repro.graphs.generators import make_dataset
+
+    graphs = {
+        "kron": dict(scale=10) if quick else dict(scale=13),
+        "delaunay": dict(scale=32) if quick else dict(scale=96),
+    }
+    banked = IRUConfig(mode="hash", n_partitions=4, n_banks=2, **GEOM)
+    engines = {
+        "sort": IRUConfig(mode="sort"),
+        "hash": IRUConfig(mode="hash", **GEOM),
+        "hash_banked": banked,
+        "hash_w8192": IRUConfig(mode="hash", window_elems=8192, **GEOM),
+    }
+    for gname, kw in graphs.items():
+        stream = jnp.asarray(_bfs_edge_frontiers(make_dataset(gname, **kw)))
+        n = stream.shape[0]
+        for ename, cfg in engines.items():
+            fn = (lambda s=stream, c=cfg:
+                  iru_reorder(s, config=c).indices.block_until_ready())
+            sec = _time(fn, min_time=0.0, max_reps=3)
+            eps = n / sec if sec > 0 else float("inf")
+            row = f"{gname}_frontier_{ename}"
+            results.setdefault(row, {})[str(n)] = round(eps, 1)
+            print(f"n={n:>9,}  {row:<24} {sec*1e3:10.2f} ms   "
+                  f"{eps:14,.0f} elem/s")
+
+
+def app_rows(results: dict, quick: bool) -> None:
+    """Whole-app pipeline-vs-host rows (edges relaxed per second)."""
+    from repro.apps.bfs import bfs
+    from repro.apps.pagerank import pagerank
+    from repro.apps.sssp import sssp
+    from repro.graphs.generators import make_dataset
+
+    g = make_dataset("kron", **(dict(scale=10) if quick else dict(scale=13)))
+    deg = np.asarray(g.degrees())
+    source = int(np.argmax(deg))
+    iters = 5
+    # same paper 4x2 geometry on both sides: the host loop reorders through
+    # the hash_ref oracle per iteration, the pipeline through the banked
+    # device engine inside one compiled while_loop
+    geom = dict(n_partitions=4, n_banks=2, round_cap=64, window_elems=8192,
+                **GEOM)
+    host_cfg = {
+        "bfs": IRUConfig(mode="hash_ref", **geom),
+        "sssp": IRUConfig(mode="hash_ref", filter_op="min", **geom),
+        "pr": IRUConfig(mode="hash_ref", filter_op="add", **geom),
+    }
+    pipe_cfg = IRUConfig(mode="hash", **geom)
+    # pipelines build (and compile) ONCE; the timed thunk is the steady-state
+    # whole-run executable — exactly what a service would amortize
+    from repro.apps.bfs import BFS_APP
+    from repro.apps.pagerank import pagerank_app
+    from repro.apps.sssp import SSSP_APP
+    from repro.core.pipeline import FrontierPipeline
+
+    bfs_p = FrontierPipeline(g, BFS_APP, mode="hash", iru_config=pipe_cfg)
+    sssp_p = FrontierPipeline(g, SSSP_APP, mode="hash", iru_config=pipe_cfg)
+    pr_p = FrontierPipeline(g, pagerank_app(iters), mode="hash",
+                            iru_config=pipe_cfg, max_iters=iters)
+    # three variants per app: host loop + numpy-oracle reorder (hash_ref),
+    # host loop + the DEVICE hash engine (one device round trip per
+    # iteration — what the pipeline exists to remove), and the pipeline
+    # (same device engine, one compiled while_loop for the whole run)
+    hostdev_cfg = {k: dataclasses.replace(c, mode="hash")
+                   for k, c in host_cfg.items()}
+    rows = {
+        "app_bfs_host": (g.n_edges, lambda: bfs(
+            g, source, mode="iru", iru_config=host_cfg["bfs"])),
+        "app_bfs_hostdev": (g.n_edges, lambda: bfs(
+            g, source, mode="iru", iru_config=hostdev_cfg["bfs"])),
+        "app_bfs_pipe": (g.n_edges,
+                         lambda: np.asarray(bfs_p.run(source))),
+        "app_sssp_host": (g.n_edges, lambda: sssp(
+            g, source, mode="iru", iru_config=host_cfg["sssp"])),
+        "app_sssp_hostdev": (g.n_edges, lambda: sssp(
+            g, source, mode="iru", iru_config=hostdev_cfg["sssp"])),
+        "app_sssp_pipe": (g.n_edges,
+                          lambda: np.asarray(sssp_p.run(source))),
+        "app_pr_host": (g.n_edges * iters, lambda: pagerank(
+            g, iters=iters, mode="iru", iru_config=host_cfg["pr"])),
+        "app_pr_hostdev": (g.n_edges * iters, lambda: pagerank(
+            g, iters=iters, mode="iru", iru_config=hostdev_cfg["pr"])),
+        "app_pr_pipe": (g.n_edges * iters,
+                        lambda: np.asarray(pr_p.run())),
+    }
+    for name, (edges, fn) in rows.items():
+        sec = _time(fn, min_time=0.2, max_reps=5)
+        eps = edges / sec if sec > 0 else float("inf")
+        results.setdefault(name, {})[str(edges)] = round(eps, 1)
+        print(f"n={edges:>9,}  {name:<24} {sec*1e3:10.2f} ms   "
+              f"{eps:14,.0f} edge/s")
+
+
+def run(quick: bool = False, apps_only: bool = False) -> dict:
     sizes = QUICK_SIZES if quick else SIZES
     results: dict[str, dict[str, float]] = {}
+    if apps_only:
+        app_rows(results, quick)
+        return {
+            "metric": "elements_per_second",
+            "backend": jax.default_backend(),
+            "results": results,
+        }
     for n in sizes:
         for name, fn, tkw in _rows(n, quick):
             sec = _time(fn, **tkw)
@@ -230,13 +378,15 @@ def run(quick: bool = False) -> dict:
             results.setdefault(name, {})[str(n)] = round(eps, 1)
             print(f"n={n:>9,}  {name:<16} {sec*1e3:10.2f} ms   "
                   f"{eps:14,.0f} elem/s")
+    frontier_rows(results, quick)
+    app_rows(results, quick)
     out = {
         "metric": "elements_per_second",
         "backend": jax.default_backend(),
         "geometry": dict(GEOM, n_partitions_sweep=list(PART_SWEEP), n_banks=2),
         "sizes": list(sizes),
         "results": results,
-        "notes": {"seed_pallas": SEED_PALLAS_NOTE},
+        "notes": {"seed_pallas": SEED_PALLAS_NOTE, "app_rows": APP_ROWS_NOTE},
     }
     key = str(100_000)
     if key in results.get("hash", {}) and key in results.get("seed_pallas", {}):
@@ -258,6 +408,27 @@ def run(quick: bool = False) -> dict:
             all(a <= b for a, b in zip(curve, curve[1:])))
         print(f"partition sweep @1M (el/s): {sweep}  "
               f"monotone={out['partition_sweep_1m_monotone']}")
+    if mkey in results.get("hash_p4_vmap", {}):
+        r = round(results["hash_p4_vmap"][mkey] / results["hash_p4"][mkey], 2)
+        out["bank_vmap_vs_map_1m"] = r
+        winner = "vmap" if r > 1 else "lax.map"
+        out["notes"] = dict(out.get("notes", {}), bank_map=(
+            f"vmap-over-bank-rows vs lax.map at 1M hot-set stream: "
+            f"{r}x — {winner} wins on this backend (ROADMAP open item)"))
+        print(f"bank rows vmap vs lax.map @1M: {r}x ({winner} wins)")
+    for app in ("bfs", "sssp", "pr"):
+        hk, dk, pk = (f"app_{app}_host", f"app_{app}_hostdev",
+                      f"app_{app}_pipe")
+        if hk in results and pk in results:
+            (ek, hv), = results[hk].items()
+            pv = results[pk][ek]
+            out[f"speedup_pipeline_vs_host_{app}"] = round(pv / hv, 2)
+            line = f"pipeline vs host(oracle) {app}: {round(pv / hv, 2)}x"
+            if dk in results:
+                dv = results[dk][ek]
+                out[f"speedup_pipeline_vs_hostdev_{app}"] = round(pv / dv, 2)
+                line += f"   vs host(device engine): {round(pv / dv, 2)}x"
+            print(line)
     if key in results.get("adv_sort", {}):
         ratio = round(results["adv_hash_cap64"][key]
                       / results["adv_sort"][key], 2)
@@ -271,9 +442,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--no-write", action="store_true")
+    ap.add_argument("--apps-only", action="store_true",
+                    help="only the app-level pipeline-vs-host rows "
+                         "(what `make bench-apps-quick` runs)")
     args = ap.parse_args()
-    out = run(quick=args.quick)
-    if not args.no_write and not args.quick:
+    out = run(quick=args.quick, apps_only=args.apps_only)
+    if not args.no_write and not args.quick and not args.apps_only:
         with open(OUT_PATH, "w") as f:
             json.dump(out, f, indent=1)
         print(f"wrote {os.path.normpath(OUT_PATH)}")

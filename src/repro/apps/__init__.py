@@ -1,14 +1,30 @@
 """Graph applications from the paper (§4.1): push BFS, SSSP, PageRank.
 
-Each app runs in ``baseline`` or ``iru`` mode; the IRU mode routes the
-irregular edge-frontier accesses through ``repro.core.iru`` exactly as the
-paper's instrumented kernels (Figures 8-10) route them through ``load_iru``.
+Each app exists in two forms with one semantics:
+
+* the host (numpy) implementations — ``bfs`` / ``sssp`` / ``pagerank`` —
+  are the parity oracles, one IRU round trip per iteration, exactly the
+  paper's instrumented kernels (Figures 8-10);
+* the ``*_pipeline`` forms declare the app to
+  ``repro.core.pipeline.FrontierPipeline`` (``BFS_APP`` / ``SSSP_APP`` /
+  ``pagerank_app``) and run the whole traversal device-resident in one
+  compiled ``lax.while_loop`` — baseline / sort / hash reorder modes from
+  one code path.
+
 A TraceRecorder captures every irregular index stream so the GPU cost model
-(benchmarks, Figures 11-15) replays identical access sequences.
+(benchmarks, Figures 11-15) replays identical access sequences; the pipeline
+feeds it through ``run_instrumented`` (the single instrumentation hook).
 """
-from repro.apps.bfs import bfs, bfs_jit
-from repro.apps.pagerank import pagerank, pagerank_jit
-from repro.apps.sssp import sssp
+from repro.apps.bfs import BFS_APP, bfs, bfs_jit, bfs_pipeline
+from repro.apps.pagerank import (
+    pagerank,
+    pagerank_app,
+    pagerank_jit,
+    pagerank_pipeline,
+)
+from repro.apps.sssp import SSSP_APP, sssp, sssp_pipeline
 from repro.apps.trace import TraceRecorder
 
-__all__ = ["bfs", "bfs_jit", "pagerank", "pagerank_jit", "sssp", "TraceRecorder"]
+__all__ = ["BFS_APP", "SSSP_APP", "TraceRecorder", "bfs", "bfs_jit",
+           "bfs_pipeline", "pagerank", "pagerank_app", "pagerank_jit",
+           "pagerank_pipeline", "sssp", "sssp_pipeline"]

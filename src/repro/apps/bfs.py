@@ -3,7 +3,19 @@
 The irregular access is the status/label lookup ``label[edge_frontier[i]]``.
 ``iru`` mode reorders the edge frontier with the IRU before the lookup —
 identical results, better-coalesced index stream (recorded for the cost
-model).  ``bfs_jit`` is a fixed-shape pure-JAX variant for jit contexts.
+model).
+
+Three realizations, one semantics:
+
+* ``bfs`` — the host (numpy) parity oracle, one ``reorder_frontier`` round
+  trip per level; what the trace-driven GPU cost model replays.
+* ``bfs_pipeline`` / ``BFS_APP`` — the device-resident path: ``BFS_APP``
+  declares BFS to ``core.pipeline.FrontierPipeline`` (min-merged depth
+  scatter, changed-label frontier), which runs the whole traversal as one
+  compiled ``lax.while_loop`` — no host numpy between levels.
+* ``bfs_jit`` — the dense all-edges fixed-shape variant (no frontier
+  expansion at all); kept as the simplest jit reference.
+
 ``iru_config`` carries the full hash geometry including the banked
 ``n_partitions`` / ``n_banks`` / ``round_cap`` knobs (paper: 4x2, see
 ``benchmarks/common.IRU_HASH``).
@@ -19,6 +31,7 @@ import numpy as np
 from repro.apps.trace import TraceRecorder
 from repro.core import IRUConfig
 from repro.core.iru import reorder_frontier
+from repro.core.pipeline import FrontierApp, FrontierPipeline
 from repro.graphs.csr import CSRGraph
 
 UNVISITED = np.iinfo(np.int32).max
@@ -73,6 +86,61 @@ def bfs(
         label[unvisited] = depth
         frontier = unvisited.astype(np.int32)
     return label
+
+
+# ---------------------------------------------------------------------------
+# Device-resident pipeline declaration
+# ---------------------------------------------------------------------------
+
+def _bfs_init(graph: CSRGraph, source: int):
+    n = graph.n_nodes
+    label = jnp.full((n,), UNVISITED, jnp.int32).at[source].set(0)
+    mask = jnp.zeros((n,), jnp.bool_).at[source].set(True)
+    return {"label": label, "depth": jnp.int32(0)}, mask
+
+
+def _bfs_candidate(state, graph: CSRGraph, ef):
+    return jnp.broadcast_to(state["depth"] + 1, ef.dsts.shape).astype(jnp.int32)
+
+
+def _bfs_update(state, new_label, graph: CSRGraph):
+    mask = new_label < state["label"]
+    return {"label": new_label, "depth": state["depth"] + 1}, mask
+
+
+BFS_APP = FrontierApp(
+    name="bfs",
+    filter_op="min",          # duplicate dsts merge to one depth write
+    target="label",
+    init=_bfs_init,
+    candidate=_bfs_candidate,
+    update=_bfs_update,
+    cond=lambda state, mask: jnp.any(mask),
+    result=lambda state: state["label"],
+    atomic=False,             # the paper's BFS access is a label *load*
+)
+
+
+def bfs_pipeline(
+    graph: CSRGraph,
+    source: int = 0,
+    *,
+    mode: str = "baseline",
+    iru_config: Optional[IRUConfig] = None,
+    recorder: Optional[TraceRecorder] = None,
+    **pipeline_kw,
+) -> np.ndarray:
+    """Device-resident BFS via ``FrontierPipeline`` (one compile, whole run).
+
+    Bit-identical to :func:`bfs` in every mode.  Build a
+    ``FrontierPipeline(graph, BFS_APP, ...)`` directly to amortize the
+    compile across runs/sources.
+    """
+    pipe = FrontierPipeline(graph, BFS_APP, mode=mode, iru_config=iru_config,
+                            **pipeline_kw)
+    if recorder is not None:
+        return np.asarray(pipe.run_instrumented(source, recorder=recorder))
+    return np.asarray(pipe.run(source))
 
 
 def bfs_jit(graph: CSRGraph, source: int = 0, *, max_iters: int | None = None) -> jax.Array:

@@ -1,4 +1,14 @@
-"""Irregular-access trace capture for the GPU cost model."""
+"""Irregular-access trace capture for the GPU cost model.
+
+``TraceRecorder`` is the instrumentation hook of the frontier runtime:
+``core.pipeline.FrontierPipeline.run_instrumented`` feeds it one ``access``
+event per iteration (the post-reorder index stream + active mask, atomic or
+load per the app) and ``processed`` counts for IRU-served elements — one
+code path for baseline / sort / hash measurement.  The host apps
+(``bfs``/``sssp``/``pagerank``) feed the same interface from their numpy
+loops, so cost-model replays (benchmarks, Figures 11-15) are directly
+comparable across all realizations.
+"""
 from __future__ import annotations
 
 import dataclasses

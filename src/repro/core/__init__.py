@@ -1,4 +1,5 @@
-"""Core IRU library: reorder, filter/merge, coalescing + GPU cost models."""
+"""Core IRU library: reorder, filter/merge, coalescing + GPU cost models,
+and the device-resident frontier pipeline that composes them."""
 from repro.core.coalescing import (
     BLOCK_BYTES,
     GROUP,
@@ -18,9 +19,12 @@ from repro.core.iru import (
     load_iru_gather,
     reorder_frontier,
 )
+from repro.core.pipeline import FrontierApp, FrontierPipeline
 
 __all__ = [
     "BLOCK_BYTES",
+    "FrontierApp",
+    "FrontierPipeline",
     "GROUP",
     "IRUConfig",
     "IRUStream",

@@ -103,6 +103,11 @@ class IRUConfig:
     # default; the banked generalization when n_partitions > 1) or "pallas"
     # (element-sequential behavioural twin, single-partition only)
     engine: str = "batched"
+    # banked row stage: "map" (lax.map — sequential partitions, each trips
+    # its own round count) or "vmap" (batched rows — all partitions pay the
+    # max round count but vectorize across the bank dimension).  Semantics
+    # are identical; BENCH_iru.json's hash_p4_vmap row tracks which wins.
+    bank_map: str = "map"
     interpret: Optional[bool] = None  # None = auto (resolved in kernels ops)
     # bounded lookahead: the hardware IRU reorders a *streaming window* (hash
     # occupancy under warp-request drain + timeout, §3.2.2), never the whole
@@ -122,6 +127,9 @@ class IRUConfig:
                 f"{self.n_partitions} partitions x {self.n_banks} banks")
         if self.round_cap is not None and self.round_cap < 1:
             raise ValueError(f"round_cap must be >= 1, got {self.round_cap}")
+        if self.bank_map not in ("map", "vmap"):
+            raise ValueError(
+                f"bank_map must be 'map' or 'vmap', got {self.bank_map!r}")
 
     @property
     def bank_parallelism(self) -> int:
@@ -205,6 +213,7 @@ def _reorder_window(
             engine=config.engine,
             n_partitions=config.n_partitions,
             round_cap=config.round_cap,
+            bank_map=config.bank_map,
         )
     else:
         raise ValueError(f"unknown IRU mode {config.mode!r}")

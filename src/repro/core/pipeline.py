@@ -1,0 +1,244 @@
+"""Device-resident frontier pipeline: one compiled step per (graph, app).
+
+The paper's IRU wins come from keeping the graph-analytics inner loop —
+expand → reorder → filter/merge → update — on-device (Figs. 8-10).  The host
+apps (``apps.bfs`` / ``apps.sssp`` / ``apps.pagerank``) re-implement that
+loop in numpy per app, paying a host↔device round trip per iteration.  This
+module is the shared runtime that composes the loop out of the repo's
+device-resident pieces instead, Gunrock-style (frontier operators as the
+unifying abstraction; locality transforms inside the shared runtime):
+
+* **expand** — ``graphs.csr.expand_frontier``: capacity-padded CSR
+  edge-frontier expansion, optionally through the block-reuse gather kernel
+  (``kernels/coalesced_gather``);
+* **reorder** — ``core.iru.iru_reorder``: the sort engine or the
+  batched/banked hash engines (the paper's 4x2 partition geometry,
+  ``round_cap`` hybrid, streaming windows — everything ``IRUConfig`` can
+  express except the host-only ``hash_ref``);
+* **filter/merge** — the engine's merge datapath (``core.filter``
+  add/min), surfaced as the stream's ``active`` mask;
+* **update** — the app's scatter + frontier rule (a ``FrontierApp``).
+
+``FrontierPipeline.run`` drives the whole traversal as ONE jitted
+``lax.while_loop``: zero host numpy between iterations, one compile per
+(graph shape, app) — re-running with a different source, or running again,
+reuses the executable (``n_traces`` counts compiles; tests assert exactly
+one).  ``FrontierPipeline.run_instrumented`` steps the SAME compiled step
+from the host to feed a ``TraceRecorder`` — baseline / sort / hash modes are
+measured from one code path instead of three per-app reimplementations.
+
+Apps declare themselves as ``FrontierApp`` records: an init rule, a
+per-edge candidate value, a scatter target + merge op, and an update /
+convergence predicate.  See ``apps.bfs.BFS_APP`` etc. for the three paper
+apps; anything frontier-shaped (k-core, connected components, label
+propagation) slots in the same way.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.iru import IRUConfig, iru_reorder
+from repro.graphs.csr import CSRGraph, expand_frontier, frontier_from_mask
+
+State = Any  # pytree of arrays (dict); app-defined
+
+
+def _merge_identity(op: str, dtype) -> jax.Array:
+    """Neutral element of a merge op at a payload dtype (inert lanes)."""
+    if op == "add":
+        return jnp.zeros((), dtype)
+    big = (jnp.array(jnp.iinfo(dtype).max, dtype)
+           if jnp.issubdtype(dtype, jnp.integer)
+           else jnp.array(jnp.inf, dtype))
+    if op == "min":
+        return big
+    if op == "max":
+        return -big - (1 if jnp.issubdtype(dtype, jnp.integer) else 0)
+    raise ValueError(f"unknown merge op {op!r}")
+
+
+def _scatter(target: jax.Array, idx: jax.Array, val: jax.Array,
+             act: jax.Array, op: str) -> jax.Array:
+    """Merged scatter: inactive lanes retarget out of range and drop."""
+    dest = jnp.where(act, idx, target.shape[0])
+    if op == "add":
+        return target.at[dest].add(val, mode="drop")
+    if op == "min":
+        return target.at[dest].min(val, mode="drop")
+    if op == "max":
+        return target.at[dest].max(val, mode="drop")
+    raise ValueError(f"unknown merge op {op!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontierApp:
+    """Declarative frontier app: what varies between BFS / SSSP / PageRank.
+
+    The pipeline owns expansion, reorder, merge and the scatter; the app
+    owns only its state, its per-edge candidate value, and its frontier /
+    convergence rule.
+
+    * ``init(graph, source)`` -> ``(state, mask)``: initial state pytree and
+      dense bool[n_nodes] frontier mask.
+    * ``candidate(state, graph, ef)`` -> per-lane payload [edge_capacity]
+      (``ef`` is a ``graphs.csr.EdgeFrontier``; invalid lanes are
+      overwritten with the merge identity by the pipeline).
+    * ``target``: state key the merged stream scatters into (``filter_op``
+      is both the IRU merge op and the scatter op — the paper couples them
+      the same way: the merge datapath mirrors the atomic).
+    * ``update(state, new_target, graph)`` -> ``(state, mask)``: commit the
+      scattered target, advance counters, emit the next frontier mask.
+    * ``cond(state, mask)`` -> bool scalar: keep iterating?
+    * ``result(state)`` -> the app's output array.
+    * ``atomic``: whether the recorded irregular access is an atomic
+      (SSSP/PR scatters) or a plain load (BFS label lookups) — trace
+      bookkeeping only.
+    * ``needs_weights``: expansion co-gathers edge weights into
+      ``ef.weights`` (through the same kernel pass on the pallas path).
+    """
+
+    name: str
+    filter_op: str
+    target: str
+    init: Callable[[CSRGraph, int], tuple[State, jax.Array]]
+    candidate: Callable[[State, CSRGraph, Any], jax.Array]
+    update: Callable[[State, jax.Array, CSRGraph], tuple[State, jax.Array]]
+    cond: Callable[[State, jax.Array], jax.Array]
+    result: Callable[[State], jax.Array]
+    atomic: bool = True
+    needs_weights: bool = False
+
+
+class FrontierPipeline:
+    """Single-compile frontier runtime over one (graph, app) pair.
+
+    ``mode`` selects the reorder stage from one code path:
+
+    * ``"baseline"`` — no reorder; the raw expansion stream scatters
+      directly (duplicate lanes resolved by the scatter op itself);
+    * ``"sort"``     — the stable-sort engine (infinite-patience bound);
+    * ``"hash"``     — the paper's bounded hash engine; the full
+      ``IRUConfig`` geometry applies (banked partitions, ``round_cap``,
+      ``window_elems``, ``bank_map``...).
+
+    ``iru_config`` carries the geometry; its ``mode``/``filter_op`` are
+    overridden by ``mode`` and the app's op (``hash_ref`` is host-only and
+    rejected — the pipeline is the device path).
+    """
+
+    def __init__(
+        self,
+        graph: CSRGraph,
+        app: FrontierApp,
+        *,
+        mode: str = "baseline",
+        iru_config: Optional[IRUConfig] = None,
+        max_iters: Optional[int] = None,
+        edge_capacity: Optional[int] = None,
+        gather: str = "xla",
+    ):
+        if mode not in ("baseline", "sort", "hash"):
+            raise ValueError(
+                f"mode must be baseline|sort|hash, got {mode!r} "
+                "(hash_ref is the host oracle; use apps.* host paths)")
+        self.graph = graph
+        self.app = app
+        self.mode = mode
+        self.max_iters = graph.n_nodes if max_iters is None else max_iters
+        self.edge_capacity = (graph.n_edges if edge_capacity is None
+                              else edge_capacity)
+        self.gather = gather
+        if mode == "baseline":
+            self.iru_config = None
+        else:
+            self.iru_config = dataclasses.replace(
+                iru_config or IRUConfig(), mode=mode, filter_op=app.filter_op)
+        self.n_traces = 0  # whole-run compiles (tests assert exactly 1)
+        self._run = jax.jit(self._run_impl)
+        self._step = jax.jit(self._step_impl)
+
+    # -- one pipeline iteration (expand → reorder → merge → update) --------
+    def _step_impl(self, g, state, mask):
+        # ``g`` rides as a jit argument (CSRGraph is a pytree), not a baked
+        # closure constant: the executable is reusable across same-shape
+        # graphs and the HLO carries no giant literals
+        app = self.app
+        n = g.n_nodes
+        nodes = frontier_from_mask(mask)
+        ef = expand_frontier(g, nodes, edge_capacity=self.edge_capacity,
+                             gather=self.gather,
+                             with_weights=app.needs_weights)
+        vals = app.candidate(state, g, ef)
+        ident = _merge_identity(app.filter_op, vals.dtype)
+        vals = jnp.where(ef.valid, vals, ident)
+        n_edges = jnp.sum(ef.valid.astype(jnp.int32))
+        if self.iru_config is None:
+            idx, svals, act = ef.dsts, vals, ef.valid
+            real = ef.valid
+        else:
+            # padding lanes carry the sentinel index n: they ride through
+            # the reorder as ordinary elements (merging only with each
+            # other) and drop at the scatter — stream shape stays static
+            stream = iru_reorder(ef.dsts, vals, config=self.iru_config)
+            idx, svals = stream.indices, stream.secondary
+            act = stream.active & (stream.indices < n)
+            # expansion emits valid lanes front-packed, so a lane is a real
+            # element iff its original position is below the valid count —
+            # what the instrumented driver crops traces to (padding lanes
+            # issue no memory access and must not count in the cost model)
+            real = stream.positions < n_edges
+        new_target = _scatter(state[app.target], idx, svals, act,
+                              app.filter_op)
+        state, mask = app.update(state, new_target, g)
+        return state, mask, idx, act, real, n_edges
+
+    def _run_impl(self, g, state, mask):
+        self.n_traces += 1  # python body: executes per trace, not per call
+
+        def cond(carry):
+            s, m, it = carry
+            return self.app.cond(s, m) & (it < self.max_iters)
+
+        def body(carry):
+            s, m, it = carry
+            s, m, *_ = self._step_impl(g, s, m)
+            return s, m, it + 1
+
+        state, _, _ = jax.lax.while_loop(
+            cond, body, (state, mask, jnp.int32(0)))
+        return state
+
+    # -- public drivers ----------------------------------------------------
+    def init(self, source: int = 0) -> tuple[State, jax.Array]:
+        return self.app.init(self.graph, source)
+
+    def run(self, source: int = 0) -> jax.Array:
+        """Whole traversal in one compiled call (zero host work inside)."""
+        state, mask = self.init(source)
+        return self.app.result(self._run(self.graph, state, mask))
+
+    def run_instrumented(self, source: int = 0, *, recorder=None) -> jax.Array:
+        """Host-stepped traversal over the same compiled step, feeding a
+        ``apps.trace.TraceRecorder`` per iteration — the single
+        instrumentation point for baseline/sort/hash measurement."""
+        state, mask = self.init(source)
+        it = 0
+        while it < self.max_iters and bool(np.asarray(self.app.cond(state, mask))):
+            state, mask, idx, act, real, n_edges = self._step(
+                self.graph, state, mask)
+            it += 1
+            if recorder is not None:
+                if self.mode != "baseline":
+                    recorder.processed(int(n_edges))
+                # crop to real-element lanes: recorded streams carry exactly
+                # the accesses the traversal issues, same element counts as
+                # the host apps' ragged traces (capacity padding is free)
+                sel = np.asarray(real)
+                recorder.access(np.asarray(idx)[sel], np.asarray(act)[sel],
+                                atomic=self.app.atomic)
+        return self.app.result(state)

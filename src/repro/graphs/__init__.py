@@ -1,5 +1,12 @@
 """Graph substrate: CSR structures, Table-3-like synthetic datasets, frontiers."""
-from repro.graphs.csr import CSRGraph, from_edges
+from repro.graphs.csr import (
+    CSRGraph,
+    EdgeFrontier,
+    expand_frontier,
+    from_edges,
+    frontier_from_mask,
+)
 from repro.graphs.generators import DATASETS, make_dataset
 
-__all__ = ["CSRGraph", "from_edges", "DATASETS", "make_dataset"]
+__all__ = ["CSRGraph", "EdgeFrontier", "expand_frontier", "from_edges",
+           "frontier_from_mask", "DATASETS", "make_dataset"]

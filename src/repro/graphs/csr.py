@@ -2,10 +2,15 @@
 GPGPU graph layout; the IRU consumes its edge frontiers).
 
 Arrays live as jax arrays so apps can jit over them; builders accept numpy.
+:func:`expand_frontier` is the device-resident edge-frontier expansion the
+``core.pipeline`` runtime drives every iteration: fixed ``edge_capacity``
+output shapes (padding lanes carry ``valid=False``) make it legal inside
+``lax.while_loop`` — no host round trip, no retracing across iterations.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +42,107 @@ class CSRGraph:
 
     def avg_degree(self) -> float:
         return self.n_edges / max(self.n_nodes, 1)
+
+
+class EdgeFrontier(NamedTuple):
+    """Capacity-padded edge frontier (all arrays ``[edge_capacity]``)."""
+
+    srcs: jax.Array    # int32 source node per edge lane (n_nodes on padding)
+    dsts: jax.Array    # int32 destination node per lane (n_nodes on padding)
+    eids: jax.Array    # int32 CSR edge offset per lane (padding repeats the
+    #                    last real offset, keeping the stream monotone so
+    #                    the block-reuse gather's window contract survives)
+    valid: jax.Array   # bool  True on real edge lanes
+    weights: jax.Array | None = None  # f32 edge weight per lane (on request)
+
+
+def frontier_from_mask(mask: jax.Array) -> jax.Array:
+    """Dense frontier mask -> capacity-padded ascending node list.
+
+    Returns int32[n_nodes]; tail lanes past the frontier size carry the
+    sentinel ``n_nodes`` (which :func:`expand_frontier` expands to nothing).
+    Ascending order matters: it makes the CSR offsets of the expansion
+    monotone, which is what the block-reuse gather kernel exploits.
+    """
+    n = mask.shape[0]
+    return jnp.nonzero(mask, size=n, fill_value=n)[0].astype(jnp.int32)
+
+
+def expand_frontier(
+    graph: CSRGraph,
+    frontier: jax.Array,
+    *,
+    edge_capacity: int | None = None,
+    gather: str = "xla",
+    with_weights: bool = False,
+) -> EdgeFrontier:
+    """Device-resident CSR edge-frontier expansion (fixed output shapes).
+
+    ``frontier`` is int32[F] node ids, padded with sentinels ``>= n_nodes``
+    (what :func:`frontier_from_mask` emits).  Each valid node contributes its
+    full CSR range; lanes are laid out node-major in frontier order — the
+    Gunrock "advance" operator as a shape-stable gather, legal under
+    ``jit``/``lax.while_loop``.  Work per lane is the load-balanced-search
+    form: a ``searchsorted`` over the frontier's degree prefix sum locates
+    the owning node of every output lane in O(log F).
+
+    ``gather`` selects how ``col_idx`` is serviced: ``"xla"`` (native take)
+    or ``"pallas"`` (the block-reuse kernel of ``kernels/coalesced_gather``
+    — ascending frontiers make the offsets monotone, exactly its window
+    contract; it falls back to the native gather when violated).
+
+    PRECONDITION: frontier node ids must be UNIQUE (what
+    :func:`frontier_from_mask` produces by construction).  The expansion
+    emits at most ``edge_capacity`` lanes and TRUNCATES silently past it
+    (static shapes leave no way to raise under jit); the default capacity
+    ``n_edges`` is exactly the bound a unique-node frontier can never
+    exceed, but a duplicated id inflates the degree sum past it and drops
+    edges.  Callers shrinking ``edge_capacity`` below ``n_edges`` take on
+    the same obligation: bound the frontier's degree sum themselves.
+    """
+    n = graph.n_nodes
+    cap = graph.n_edges if edge_capacity is None else edge_capacity
+    f = frontier.astype(jnp.int32)
+    F = f.shape[0]
+    # out-of-range ids (the >= n sentinel, but also any stray negative id —
+    # the banked engine's other padding convention) expand to nothing
+    in_range = (f >= 0) & (f < n)
+    fc = jnp.clip(f, 0, n - 1)
+    starts = graph.row_ptr[fc]
+    counts = jnp.where(in_range, graph.row_ptr[fc + 1] - starts, 0)
+    cum = jnp.cumsum(counts)
+    total = cum[F - 1] if F else jnp.int32(0)
+
+    lane = jnp.arange(cap, dtype=jnp.int32)
+    valid = lane < total
+    k = jnp.clip(jnp.searchsorted(cum, lane, side="right"), 0, F - 1)
+    k = k.astype(jnp.int32)
+    base = cum[k] - counts[k]
+    raw = starts[k] + (lane - base)
+    # padding repeats the LAST real offset (not 0): the offset stream stays
+    # monotone non-decreasing end to end, so a trailing partial group does
+    # not break the gather kernel's two-window contract
+    pad_eid = jnp.max(jnp.where(valid, raw, 0))
+    eids = jnp.where(valid, raw, pad_eid).astype(jnp.int32)
+    srcs = jnp.where(valid, fc[k], n).astype(jnp.int32)
+    weights = None
+    if gather == "pallas":
+        from repro.kernels.coalesced_gather.ops import csr_edge_gather
+
+        if with_weights:
+            # one kernel pass stages each HBM window once for both arrays
+            dsts, weights = csr_edge_gather(graph.col_idx, eids,
+                                            graph.weights)
+        else:
+            dsts = csr_edge_gather(graph.col_idx, eids)
+    elif gather == "xla":
+        dsts = graph.col_idx[eids]
+        if with_weights:
+            weights = graph.weights[eids]
+    else:
+        raise ValueError(f"unknown gather backend {gather!r}")
+    dsts = jnp.where(valid, dsts, n).astype(jnp.int32)
+    return EdgeFrontier(srcs, dsts, eids, valid, weights)
 
 
 def from_edges(

@@ -41,3 +41,40 @@ def coalesced_gather(
         table,
         indices,
     )
+
+
+@functools.partial(jax.jit, static_argnames=("group", "window", "interpret"))
+def csr_edge_gather(
+    col_idx: jax.Array,
+    offsets: jax.Array,
+    weights: Optional[jax.Array] = None,
+    *,
+    group: int = 8,
+    window: int = 128,
+    interpret: Optional[bool] = None,
+):
+    """Edge-array gather ``col_idx[offsets]`` (and optionally
+    ``weights[offsets]``) through the block-reuse kernel.
+
+    This is the expansion path of ``graphs.csr.expand_frontier``: an
+    ascending node frontier makes CSR offsets monotone non-decreasing, so
+    consecutive lanes read inside narrow aligned windows — the kernel's
+    exact contract (violations fall back to the native gather inside
+    ``coalesced_gather``, trading coalescing for progress, never
+    correctness).  When ``weights`` is given, both edge arrays ride ONE
+    kernel pass: the int32 column ids bitcast to f32 and pack with the
+    weights as a two-column table, so each HBM window is staged exactly
+    once for both gathers.
+    """
+    if weights is None:
+        table = jax.lax.bitcast_convert_type(
+            col_idx.astype(jnp.int32), jnp.float32)[:, None]
+        out = coalesced_gather(table, offsets, group=group, window=window,
+                               interpret=interpret)
+        return jax.lax.bitcast_convert_type(out[:, 0], jnp.int32)
+    table = jnp.stack(
+        [jax.lax.bitcast_convert_type(col_idx.astype(jnp.int32), jnp.float32),
+         weights.astype(jnp.float32)], axis=1)
+    out = coalesced_gather(table, offsets, group=group, window=window,
+                           interpret=interpret)
+    return (jax.lax.bitcast_convert_type(out[:, 0], jnp.int32), out[:, 1])

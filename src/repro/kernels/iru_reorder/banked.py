@@ -37,6 +37,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
@@ -48,7 +49,7 @@ from repro.kernels.iru_reorder.batched import (
 from repro.kernels.iru_reorder.iru_reorder import _hash_set
 from repro.kernels.iru_reorder.ref import partition_capacity
 
-_INT32_MAX = jnp.int32(jnp.iinfo(jnp.int32).max)
+_INT32_MAX = np.int32(np.iinfo(np.int32).max)
 
 
 def _row_reorder(row, *, num_sets: int, slots: int,
@@ -68,7 +69,8 @@ def _row_reorder(row, *, num_sets: int, slots: int,
 @functools.partial(
     jax.jit,
     static_argnames=("num_sets", "slots", "elem_bytes", "block_bytes",
-                     "filter_op", "n_partitions", "round_cap", "mesh"),
+                     "filter_op", "n_partitions", "round_cap", "mesh",
+                     "bank_map"),
 )
 def hash_reorder_banked(
     indices: jax.Array,
@@ -82,6 +84,7 @@ def hash_reorder_banked(
     n_partitions: int = 4,
     round_cap: Optional[int] = None,
     mesh=None,
+    bank_map: str = "map",
 ):
     """Banked hash reorder; stream-identical to ``ref.hash_reorder_ref_banked``.
 
@@ -116,11 +119,20 @@ def hash_reorder_banked(
     cnt = jnp.zeros((nP,), jnp.int32).at[part].add(1)
     overflow = jnp.max(cnt) > jnp.int32(C)
 
+    if bank_map not in ("map", "vmap"):
+        raise ValueError(f"bank_map must be 'map' or 'vmap', got {bank_map!r}")
+
     row_fn = functools.partial(
         _row_reorder, num_sets=num_sets, slots=slots, filter_op=filter_op,
         round_cap=round_cap)
 
     def rows_stage(rI, rV, rPos, rS, rValid):
+        # "map": sequential rows, each partition's round loop trips its own
+        # count.  "vmap": one batched program over rows — every partition
+        # pays the max round count, but the work vectorizes across the bank
+        # dimension (BENCH_iru.json hash_p4_vmap row tracks which wins).
+        if bank_map == "vmap":
+            return jax.vmap(row_fn)((rI, rV, rPos, rS, rValid))
         return jax.lax.map(row_fn, (rI, rV, rPos, rS, rValid))
 
     def banked_fn(_):

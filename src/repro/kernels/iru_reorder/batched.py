@@ -56,16 +56,17 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.iru_reorder.iru_reorder import _hash_set
 
 # emission bands: front groups order by (band, local_key, stream pos)
-BAND_FLUSH = jnp.int32(0)   # key = stream position of the flush trigger
-BAND_DRAIN = jnp.int32(1)   # key = set id (dense path: index value)
-BAND_PAD = jnp.int32(2)     # padding lanes of banked rows; dropped by caller
-_BAND_FILTERED = jnp.int32(3)  # assembly-internal: filtered close the tail
+BAND_FLUSH = np.int32(0)   # key = stream position of the flush trigger
+BAND_DRAIN = np.int32(1)   # key = set id (dense path: index value)
+BAND_PAD = np.int32(2)     # padding lanes of banked rows; dropped by caller
+_BAND_FILTERED = np.int32(3)  # assembly-internal: filtered close the tail
 
-_INT32_MAX = jnp.int32(jnp.iinfo(jnp.int32).max)
+_INT32_MAX = np.int32(np.iinfo(np.int32).max)
 
 
 def _pex(mask: jax.Array, ref: jax.Array) -> jax.Array:

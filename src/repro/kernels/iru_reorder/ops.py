@@ -59,6 +59,7 @@ def hash_reorder(
     n_partitions: int = 1,
     round_cap: Optional[int] = None,
     mesh=None,
+    bank_map: str = "map",
 ):
     """Paper-faithful O(n) bounded reorder. Returns an ``IRUStream``."""
     from repro.core.iru import IRUStream  # late import: core imports us lazily
@@ -80,6 +81,7 @@ def hash_reorder(
                 n_partitions=n_partitions,
                 round_cap=round_cap,
                 mesh=mesh,
+                bank_map=bank_map,
             )
         else:
             out = hash_reorder_batched(

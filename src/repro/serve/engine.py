@@ -73,7 +73,10 @@ class ServingEngine:
         return req.rid
 
     def _step_raw(self, batch_tok: np.ndarray, update_only: Optional[int] = None):
-        pos_dev = jnp.asarray(self.pos)
+        # snapshot: jnp.asarray zero-copy-aliases numpy buffers on CPU, and the
+        # decode dispatch is async — mutating self.pos in place below would
+        # race with the device read and corrupt per-slot cache-write offsets
+        pos_dev = jnp.asarray(self.pos.copy())
         logits, new_cache = self._decode(self.params, jnp.asarray(batch_tok), self.cache, pos_dev)
         self.cache = new_cache
         if update_only is None:
@@ -121,7 +124,7 @@ class ServingEngine:
         for t in toks[:-1]:
             batch_tok = np.zeros((self.sc.batch_slots, 1), np.int32)
             batch_tok[slot, 0] = int(t)
-            pos_dev = jnp.asarray(self.pos)
+            pos_dev = jnp.asarray(self.pos.copy())  # see _step_raw: alias race
             _, self.cache = self._decode(self.params, jnp.asarray(batch_tok), self.cache, pos_dev)
             self.pos[slot] += 1
 

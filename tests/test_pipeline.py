@@ -1,0 +1,200 @@
+"""FrontierPipeline: device-resident runtime vs host parity oracles.
+
+Covers the acceptance contract of the pipeline re-layering:
+
+* ``expand_frontier`` reproduces the host CSR expansion bit for bit;
+* bfs/pagerank/sssp through the pipeline match the host apps on rmat (kron)
+  and delaunay graphs across baseline / sort / hash (banked 4x2) modes;
+* the whole-run pipeline compiles exactly once per (graph shape, app) —
+  repeated runs and different sources reuse the executable;
+* the instrumented path feeds a TraceRecorder identically to the host apps.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.apps.bfs import BFS_APP, bfs, bfs_pipeline
+from repro.apps.pagerank import pagerank, pagerank_app, pagerank_pipeline
+from repro.apps.sssp import SSSP_APP, sssp, sssp_pipeline
+from repro.apps.trace import TraceRecorder
+from repro.core import IRUConfig
+from repro.core.pipeline import FrontierPipeline
+from repro.graphs.csr import expand_frontier, frontier_from_mask
+from repro.graphs.generators import make_dataset
+
+GRAPH_KW = {"kron": dict(scale=9), "delaunay": dict(scale=16)}
+BANKED = IRUConfig(num_sets=64, slots=8, n_partitions=4, n_banks=2,
+                   round_cap=64)
+MODES = [
+    pytest.param("baseline", None, id="baseline"),
+    pytest.param("sort", None, id="sort"),
+    pytest.param("hash", BANKED, id="hash_banked4x2"),
+]
+
+
+@pytest.fixture(scope="module", params=sorted(GRAPH_KW))
+def graph(request):
+    g = make_dataset(request.param, **GRAPH_KW[request.param])
+    g.source = int(np.argmax(np.asarray(g.degrees())))  # connected source
+    return g
+
+
+# ---------------------------------------------------------------------------
+# expand_frontier
+# ---------------------------------------------------------------------------
+
+def _host_expand(g, nodes):
+    from repro.apps.bfs import _expand
+
+    return _expand(np.asarray(g.row_ptr), np.asarray(g.col_idx),
+                   np.asarray(nodes, np.int64))
+
+
+def test_expand_frontier_matches_host(graph):
+    rng = np.random.default_rng(0)
+    n = graph.n_nodes
+    for frac in (0.01, 0.3, 1.0):
+        mask = jnp.asarray(rng.random(n) < frac)
+        nodes = frontier_from_mask(mask)
+        ef = expand_frontier(graph, nodes)
+        valid = np.asarray(ef.valid)
+        host_nodes = np.sort(np.flatnonzero(np.asarray(mask)))
+        expect = _host_expand(graph, host_nodes)
+        got = np.asarray(ef.dsts)[valid]
+        np.testing.assert_array_equal(got, expect)
+        # srcs expand node-major in frontier order; eids index real edges
+        np.testing.assert_array_equal(
+            np.asarray(graph.col_idx)[np.asarray(ef.eids)[valid]], expect)
+        assert not valid[np.asarray(ef.dsts) >= n].any()
+
+
+def test_expand_frontier_empty_and_full(graph):
+    n = graph.n_nodes
+    ef = expand_frontier(graph, frontier_from_mask(jnp.zeros((n,), bool)))
+    assert int(ef.valid.sum()) == 0
+    ef = expand_frontier(graph, frontier_from_mask(jnp.ones((n,), bool)))
+    assert int(ef.valid.sum()) == graph.n_edges
+
+
+def test_expand_frontier_rejects_stray_ids_and_cogathers_weights(graph):
+    n = graph.n_nodes
+    deg = np.asarray(graph.degrees())
+    f = jnp.asarray(np.array([-1, 1, -7, 3, n, n + 5], np.int32))
+    for gather in ("xla", "pallas"):
+        ef = expand_frontier(graph, f, gather=gather, with_weights=True)
+        # out-of-range ids (negative or >= n) expand to nothing
+        assert int(ef.valid.sum()) == deg[1] + deg[3]
+        valid = np.asarray(ef.valid)
+        np.testing.assert_allclose(
+            np.asarray(ef.weights)[valid],
+            np.asarray(graph.weights)[np.asarray(ef.eids)[valid]])
+
+
+def test_expand_frontier_pallas_gather(graph):
+    rng = np.random.default_rng(1)
+    mask = jnp.asarray(rng.random(graph.n_nodes) < 0.2)
+    nodes = frontier_from_mask(mask)
+    a = expand_frontier(graph, nodes, gather="xla")
+    b = expand_frontier(graph, nodes, gather="pallas")
+    np.testing.assert_array_equal(np.asarray(a.dsts), np.asarray(b.dsts))
+    np.testing.assert_array_equal(np.asarray(a.valid), np.asarray(b.valid))
+
+
+# ---------------------------------------------------------------------------
+# pipeline vs host parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode,cfg", MODES)
+def test_bfs_pipeline_parity(graph, mode, cfg):
+    base = bfs(graph, graph.source)
+    got = bfs_pipeline(graph, graph.source, mode=mode, iru_config=cfg)
+    np.testing.assert_array_equal(base, got)
+
+
+@pytest.mark.parametrize("mode,cfg", MODES)
+def test_sssp_pipeline_parity(graph, mode, cfg):
+    base = sssp(graph, graph.source)
+    got = sssp_pipeline(graph, graph.source, mode=mode, iru_config=cfg)
+    # fp-min relaxation is reduction-order independent: exact equality
+    np.testing.assert_array_equal(base, got)
+
+
+@pytest.mark.parametrize("mode,cfg", MODES)
+def test_pagerank_pipeline_parity(graph, mode, cfg):
+    base = pagerank(graph, iters=8)
+    got = pagerank_pipeline(graph, iters=8, mode=mode, iru_config=cfg)
+    # fp-add merge order differs host vs device: tolerance, not bits
+    np.testing.assert_allclose(base, got, rtol=1e-4, atol=1e-7)
+
+
+def test_bfs_pipeline_windowed_and_vmap_banks(graph):
+    base = bfs(graph, graph.source)
+    for cfg in (IRUConfig(num_sets=64, slots=8, window_elems=512),
+                IRUConfig(num_sets=64, slots=8, n_partitions=4, n_banks=2,
+                          round_cap=64, bank_map="vmap")):
+        got = bfs_pipeline(graph, graph.source, mode="hash", iru_config=cfg)
+        np.testing.assert_array_equal(base, got)
+
+
+def test_pipeline_rejects_host_only_mode(graph):
+    with pytest.raises(ValueError):
+        FrontierPipeline(graph, BFS_APP, mode="hash_ref")
+
+
+# ---------------------------------------------------------------------------
+# compile-once discipline
+# ---------------------------------------------------------------------------
+
+def test_pipeline_compiles_once_per_graph_and_app(graph):
+    pipe = FrontierPipeline(graph, BFS_APP, mode="hash",
+                            iru_config=IRUConfig(num_sets=64, slots=8))
+    a = pipe.run(graph.source)
+    b = pipe.run(0)                   # different source: same executable
+    c = pipe.run(graph.source)        # repeat: same executable
+    assert pipe.n_traces == 1
+    np.testing.assert_array_equal(np.asarray(a), bfs(graph, graph.source))
+    np.testing.assert_array_equal(np.asarray(b), bfs(graph, 0))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_pipeline_compiles_once_all_apps(graph):
+    for app, host in ((SSSP_APP, lambda: sssp(graph, graph.source)),
+                      (pagerank_app(iters=4),
+                       lambda: pagerank(graph, iters=4))):
+        pipe = FrontierPipeline(graph, app, mode="sort",
+                                max_iters=4 if app.name == "pagerank" else None)
+        r1 = pipe.run(graph.source)
+        r2 = pipe.run(graph.source)
+        assert pipe.n_traces == 1
+        np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+
+
+# ---------------------------------------------------------------------------
+# instrumentation hook
+# ---------------------------------------------------------------------------
+
+def test_instrumented_matches_host_trace(graph):
+    cfg = IRUConfig(num_sets=64, slots=8)
+    pipe = FrontierPipeline(graph, BFS_APP, mode="hash", iru_config=cfg)
+    rec = TraceRecorder()
+    got = pipe.run_instrumented(graph.source, recorder=rec)
+    np.testing.assert_array_equal(np.asarray(got), bfs(graph, graph.source))
+
+    host_rec = TraceRecorder()
+    bfs(graph, graph.source, mode="iru",
+        iru_config=IRUConfig(mode="hash", num_sets=64, slots=8),
+        recorder=host_rec)
+    assert len(rec.events) == len(host_rec.events)
+    assert rec.iru_elements == host_rec.iru_elements
+
+
+def test_instrumented_baseline_records_raw_stream(graph):
+    pipe = FrontierPipeline(graph, BFS_APP, mode="baseline")
+    rec = TraceRecorder()
+    pipe.run_instrumented(graph.source, recorder=rec)
+    assert rec.iru_elements == 0          # baseline: nothing through the IRU
+    total = sum(int(np.count_nonzero(a)) for _, a, _ in rec.events)
+    host_rec = TraceRecorder()
+    bfs(graph, graph.source, recorder=host_rec)
+    host_total = sum(len(i) for i, _, _ in host_rec.events)
+    assert total == host_total            # same edges accessed, same count
