@@ -41,6 +41,7 @@ bench-apps-quick:
 	$(PY) -m benchmarks.iru_throughput --apps-only --quick --no-write
 
 # one pipeline BFS step on a small rmat graph through the interpret-mode
-# Pallas expansion gather + a whole-run parity check — the CI smoke
+# Pallas expansion gather + a whole-run parity check + a capacity-bucketed
+# run with a forced bucket hop — the CI smoke
 smoke-pipeline:
 	$(PY) -m benchmarks.pipeline_smoke

@@ -1,9 +1,13 @@
 """CI smoke: one FrontierPipeline BFS iteration on a small rmat graph with
-the Pallas expansion gather in interpret mode.
+the Pallas expansion gather in interpret mode, plus a capacity-bucketed
+whole run that forces a bucket hop.
 
 Exercises the full device-resident step — expand (Pallas block-reuse
 gather) → banked hash reorder → min-merge → scatter update — at a size CI
-can afford, plus the whole-run while_loop driver for parity.
+can afford, the whole-run while_loop driver for parity, and the bucketed
+dispatch path (small-bucket levels, a host-side hop to a larger bucket,
+``n_traces <= n_buckets``) so capacity bucketing is exercised in CI, not
+just in tests.
 
     PYTHONPATH=src python -m benchmarks.pipeline_smoke
 """
@@ -12,7 +16,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.apps.bfs import BFS_APP, bfs
-from repro.core import IRUConfig
+from repro.core import CapacityPolicy, IRUConfig
 from repro.core.pipeline import FrontierPipeline
 from repro.graphs.generators import make_dataset
 
@@ -27,10 +31,11 @@ def main() -> None:
     pipe = FrontierPipeline(g, BFS_APP, mode="hash", iru_config=cfg,
                             gather="pallas")
     state, mask = pipe.init(source)
-    state, mask, idx, act, real, n_edges = pipe._step(g, state, mask)
+    state, mask, idx, act, real, n_edges, overflow = pipe._step(g, state, mask)
     assert int(n_edges) == int(np.asarray(g.degrees())[source]), \
         "first expansion must cover the source's out-edges"
     assert int(np.asarray(act).sum()) > 0
+    assert not bool(overflow), "full-capacity expansion can never overflow"
 
     # the claim in this smoke's name must be true: the monotone offset
     # stream of a CSR expansion satisfies the gather's window contract,
@@ -49,10 +54,26 @@ def main() -> None:
     np.testing.assert_array_equal(np.asarray(fast.run(source)),
                                   bfs(g, source))
     assert fast.n_traces == 1
+
+    # capacity-bucketed run: min_capacity below the source degree forces at
+    # least one host-side hop out of the smallest bucket mid-traversal
+    policy = CapacityPolicy(n_buckets=3, min_capacity=32, growth=16)
+    bucketed = FrontierPipeline(g, BFS_APP, mode="hash", iru_config=cfg,
+                                capacity_policy=policy)
+    assert len(bucketed.buckets) > 1, bucketed.buckets
+    np.testing.assert_array_equal(np.asarray(bucketed.run(source)),
+                                  bfs(g, source))
+    assert 1 < bucketed.n_traces <= len(bucketed.buckets), (
+        bucketed.n_traces, bucketed.buckets)
+    np.testing.assert_array_equal(np.asarray(bucketed.run(0)), bfs(g, 0))
+    assert bucketed.n_traces <= len(bucketed.buckets)  # executables reused
+
     print(f"pipeline smoke ok: kron scale 7 ({g.n_nodes} nodes, "
           f"{g.n_edges} edges), first step expanded {int(n_edges)} edges "
           f"through the interpret-mode Pallas gather; whole run matches "
-          f"the host oracle in 1 compile")
+          f"the host oracle in 1 compile; bucketed run (ladder "
+          f"{[b[0] for b in bucketed.buckets]}) hopped buckets and matched "
+          f"in {bucketed.n_traces} compiles")
 
 
 if __name__ == "__main__":

@@ -18,7 +18,7 @@ from repro.apps.bfs import BFS_APP, bfs
 from repro.apps.pagerank import pagerank, pagerank_app
 from repro.apps.sssp import SSSP_APP, sssp
 from repro.apps.trace import TraceRecorder
-from repro.core import IRUConfig
+from repro.core import CapacityPolicy, IRUConfig
 from repro.core.costmodel import Comparison, simulate_trace
 from repro.core.pipeline import FrontierPipeline
 from repro.graphs.generators import make_dataset
@@ -40,6 +40,9 @@ print(f"dataset={args.dataset}: {g.n_nodes} nodes, {g.n_edges} edges, "
 # the paper's 4x2 banked geometry; the same config drives every app
 iru_cfg = IRUConfig(num_sets=1024, slots=32, n_partitions=4, n_banks=2,
                     round_cap=64)
+# capacity ladder: sparse BFS/SSSP levels dispatch to bucket-sized step
+# executables (PageRank's all-nodes frontier always predicts the top bucket)
+policy = CapacityPolicy(n_buckets=3, min_capacity=2048, growth=8)
 PR_ITERS = 5
 apps = {
     "bfs": (BFS_APP, None, lambda: bfs(g, source)),
@@ -55,7 +58,7 @@ for name, (app, max_iters, host_oracle) in apps.items():
     for mode in ("baseline", args.mode):
         pipe = FrontierPipeline(g, app, mode=mode,
                                 iru_config=None if mode == "baseline" else iru_cfg,
-                                max_iters=max_iters)
+                                capacity_policy=policy, max_iters=max_iters)
         rec = TraceRecorder()
         results[mode] = pipe.run_instrumented(source, recorder=rec)
         counts[mode] = simulate_trace(rec.events,

@@ -31,7 +31,7 @@ import numpy as np
 from repro.apps.trace import TraceRecorder
 from repro.core import IRUConfig
 from repro.core.iru import reorder_frontier
-from repro.core.pipeline import FrontierApp, FrontierPipeline
+from repro.core.pipeline import CapacityPolicy, FrontierApp, FrontierPipeline
 from repro.graphs.csr import CSRGraph
 
 UNVISITED = np.iinfo(np.int32).max
@@ -127,17 +127,22 @@ def bfs_pipeline(
     *,
     mode: str = "baseline",
     iru_config: Optional[IRUConfig] = None,
+    capacity_policy: Optional[CapacityPolicy] = None,
     recorder: Optional[TraceRecorder] = None,
     **pipeline_kw,
 ) -> np.ndarray:
-    """Device-resident BFS via ``FrontierPipeline`` (one compile, whole run).
+    """Device-resident BFS via ``FrontierPipeline`` (bounded compiles).
 
-    Bit-identical to :func:`bfs` in every mode.  Build a
+    Bit-identical to :func:`bfs` in every mode.  ``capacity_policy`` buckets
+    the compiled capacities so deep sparse levels (BFS is the
+    high-diameter poster child) stop paying the fixed ``n_edges`` expansion
+    per level; any expansion overflow (possible only with a caller-shrunk
+    ``edge_capacity``) is re-dispatched, never silently truncated.  Build a
     ``FrontierPipeline(graph, BFS_APP, ...)`` directly to amortize the
     compile across runs/sources.
     """
     pipe = FrontierPipeline(graph, BFS_APP, mode=mode, iru_config=iru_config,
-                            **pipeline_kw)
+                            capacity_policy=capacity_policy, **pipeline_kw)
     if recorder is not None:
         return np.asarray(pipe.run_instrumented(source, recorder=recorder))
     return np.asarray(pipe.run(source))

@@ -30,7 +30,7 @@ import numpy as np
 from repro.apps.trace import TraceRecorder
 from repro.core import IRUConfig
 from repro.core.iru import iru_scatter_add, reorder_frontier
-from repro.core.pipeline import FrontierApp, FrontierPipeline
+from repro.core.pipeline import CapacityPolicy, FrontierApp, FrontierPipeline
 from repro.graphs.csr import CSRGraph
 
 
@@ -118,6 +118,7 @@ def pagerank_pipeline(
     damping: float = 0.85,
     mode: str = "baseline",
     iru_config: Optional[IRUConfig] = None,
+    capacity_policy: Optional[CapacityPolicy] = None,
     recorder: Optional[TraceRecorder] = None,
     **pipeline_kw,
 ) -> np.ndarray:
@@ -125,9 +126,13 @@ def pagerank_pipeline(
 
     Matches :func:`pagerank` to fp-add reduction-order tolerance (the host
     oracle accumulates sequentially; the merged scatter reduces in trees).
+    PR's frontier is ALL nodes every iteration, so a ``capacity_policy``
+    always dispatches the top bucket — bucketing neither helps nor hurts
+    dense-frontier apps (the dispatch predicts this and pays nothing).
     """
     pipe = FrontierPipeline(graph, pagerank_app(iters, damping), mode=mode,
-                            iru_config=iru_config, max_iters=iters,
+                            iru_config=iru_config,
+                            capacity_policy=capacity_policy, max_iters=iters,
                             **pipeline_kw)
     if recorder is not None:
         return np.asarray(pipe.run_instrumented(recorder=recorder))

@@ -25,7 +25,7 @@ from repro.apps.bfs import _expand
 from repro.apps.trace import TraceRecorder
 from repro.core import IRUConfig
 from repro.core.iru import reorder_frontier
-from repro.core.pipeline import FrontierApp, FrontierPipeline
+from repro.core.pipeline import CapacityPolicy, FrontierApp, FrontierPipeline
 from repro.graphs.csr import CSRGraph
 
 INF = np.float32(np.inf)
@@ -129,6 +129,7 @@ def sssp_pipeline(
     *,
     mode: str = "baseline",
     iru_config: Optional[IRUConfig] = None,
+    capacity_policy: Optional[CapacityPolicy] = None,
     recorder: Optional[TraceRecorder] = None,
     max_rounds: int = 10_000,
     **pipeline_kw,
@@ -136,8 +137,12 @@ def sssp_pipeline(
     """Device-resident workfront Bellman-Ford via ``FrontierPipeline``.
 
     Bit-identical to :func:`sssp` (fp-min is reduction-order independent).
+    ``capacity_policy`` buckets the compiled capacities — sparse relaxation
+    workfronts on high-diameter graphs stop paying the fixed ``n_edges``
+    expansion per round; overflow is re-dispatched, never truncated.
     """
     pipe = FrontierPipeline(graph, SSSP_APP, mode=mode, iru_config=iru_config,
+                            capacity_policy=capacity_policy,
                             max_iters=max_rounds, **pipeline_kw)
     if recorder is not None:
         return np.asarray(pipe.run_instrumented(source, recorder=recorder))

@@ -19,10 +19,12 @@ from repro.core.iru import (
     load_iru_gather,
     reorder_frontier,
 )
-from repro.core.pipeline import FrontierApp, FrontierPipeline
+from repro.core.pipeline import (CapacityPolicy, FrontierApp,
+                                 FrontierPipeline)
 
 __all__ = [
     "BLOCK_BYTES",
+    "CapacityPolicy",
     "FrontierApp",
     "FrontierPipeline",
     "GROUP",

@@ -19,13 +19,35 @@ unifying abstraction; locality transforms inside the shared runtime):
   add/min), surfaced as the stream's ``active`` mask;
 * **update** — the app's scatter + frontier rule (a ``FrontierApp``).
 
-``FrontierPipeline.run`` drives the whole traversal as ONE jitted
-``lax.while_loop``: zero host numpy between iterations, one compile per
-(graph shape, app) — re-running with a different source, or running again,
-reuses the executable (``n_traces`` counts compiles; tests assert exactly
-one).  ``FrontierPipeline.run_instrumented`` steps the SAME compiled step
-from the host to feed a ``TraceRecorder`` — baseline / sort / hash modes are
-measured from one code path instead of three per-app reimplementations.
+``FrontierPipeline.run`` drives the traversal through jitted
+``lax.while_loop`` executables: zero host numpy between iterations, a
+BOUNDED number of compiles per (graph shape, app) — re-running with a
+different source, or running again, reuses the executables (``n_traces``
+counts compiles; tests assert the bound).
+
+**Capacity bucketing** (``CapacityPolicy``) is how sparse frontiers stop
+paying the worst-case allocation: instead of one step compiled at
+``edge_capacity = n_edges``, the runtime compiles the SAME step at a small
+geometric ladder of capacities, predicts each iteration's edge count from
+the frontier's degree sum (``graphs.csr.frontier_degree_sum`` — a cheap
+device reduction), and dispatches to the smallest bucket that fits
+(Gunrock / GraphCage: frontier runtimes live or die on sized frontier
+buffers, not worst-case allocation).  Inside ``run`` the ``while_loop``
+stays within one bucket; only when the predicted size outgrows the bucket
+— or shrinks below the rung beneath with a hysteresis margin
+(``CapacityPolicy.hysteresis``), so a frontier jittering at a rung
+boundary never ping-pongs — does control
+return to the host to hop executables (``n_hops`` counts dispatches).  So
+``n_traces <= n_buckets`` and a deep sparse traversal (high-diameter BFS)
+does O(frontier)-sized work per level instead of O(n_edges).  The node
+frontier compacts with the same ladder (``frontier_from_mask(size=...)``),
+and ``EdgeFrontier.overflow`` turns bucket misprediction into a detected,
+re-dispatched event instead of silent truncation.
+
+``FrontierPipeline.run_instrumented`` steps the SAME compiled step from the
+host, dispatching per step, to feed a ``TraceRecorder`` — baseline / sort /
+hash modes are measured from one code path instead of three per-app
+reimplementations.
 
 Apps declare themselves as ``FrontierApp`` records: an init rule, a
 per-edge candidate value, a scatter target + merge op, and an update /
@@ -36,6 +58,7 @@ propagation) slots in the same way.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, Optional
 
 import jax
@@ -43,7 +66,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.iru import IRUConfig, iru_reorder
-from repro.graphs.csr import CSRGraph, expand_frontier, frontier_from_mask
+from repro.graphs.csr import (
+    CSRGraph,
+    expand_frontier,
+    frontier_degree_sum,
+    frontier_from_mask,
+)
 
 State = Any  # pytree of arrays (dict); app-defined
 
@@ -52,14 +80,14 @@ def _merge_identity(op: str, dtype) -> jax.Array:
     """Neutral element of a merge op at a payload dtype (inert lanes)."""
     if op == "add":
         return jnp.zeros((), dtype)
-    big = (jnp.array(jnp.iinfo(dtype).max, dtype)
-           if jnp.issubdtype(dtype, jnp.integer)
-           else jnp.array(jnp.inf, dtype))
-    if op == "min":
-        return big
-    if op == "max":
-        return -big - (1 if jnp.issubdtype(dtype, jnp.integer) else 0)
-    raise ValueError(f"unknown merge op {op!r}")
+    if op not in ("min", "max"):
+        raise ValueError(f"unknown merge op {op!r}")
+    if jnp.issubdtype(dtype, jnp.integer):
+        info = jnp.iinfo(dtype)
+        # iinfo.min is exact for signed AND unsigned dtypes (0 for uintN —
+        # the old ``-max - 1`` relied on wraparound there)
+        return jnp.array(info.max if op == "min" else info.min, dtype)
+    return jnp.array(jnp.inf if op == "min" else -jnp.inf, dtype)
 
 
 def _scatter(target: jax.Array, idx: jax.Array, val: jax.Array,
@@ -73,6 +101,64 @@ def _scatter(target: jax.Array, idx: jax.Array, val: jax.Array,
     if op == "max":
         return target.at[dest].max(val, mode="drop")
     raise ValueError(f"unknown merge op {op!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class CapacityPolicy:
+    """Geometric ladder of compiled step capacities (the bucketing knob).
+
+    The pipeline compiles its step once per rung; each rung ``c`` expands
+    into ``c`` edge lanes and compacts the node frontier to
+    ``min(c, n_nodes)`` lanes.  Rungs ascend geometrically from
+    ``min_capacity`` by ``growth`` and the top rung is always the full
+    ``edge_capacity`` (node frontier ``n_nodes``) so every frontier fits
+    somewhere.  The default is ONE bucket at full capacity — exactly the
+    pre-bucketing pipeline.
+
+    More buckets = tighter working sets for sparse frontiers but more
+    compiles (``n_traces <= n_buckets``) and more host boundary hops; 3-4
+    buckets with growth 8-16 covers high-diameter traversals well.
+
+    ``hysteresis`` is the down-hop margin: the compiled loop leaves its
+    rung for a smaller one only once the frontier fits the rung below with
+    this factor to spare, so a frontier jittering around a rung boundary
+    does not pay one host dispatch per iteration.  1.0 = pure best-fit
+    (hop the moment the rung below fits — minimal padding, more hops);
+    larger values trade padding for fewer host syncs.  Host dispatch is
+    cheap on CPU and expensive on accelerators, so tune accordingly.
+    """
+
+    n_buckets: int = 1
+    min_capacity: int = 4096
+    growth: int = 8
+    hysteresis: float = 1.5
+
+    def __post_init__(self):
+        if self.n_buckets < 1:
+            raise ValueError(f"n_buckets must be >= 1, got {self.n_buckets}")
+        if self.min_capacity < 1:
+            raise ValueError(
+                f"min_capacity must be >= 1, got {self.min_capacity}")
+        if self.growth < 2:
+            raise ValueError(f"growth must be >= 2, got {self.growth}")
+        if self.hysteresis < 1.0:
+            raise ValueError(
+                f"hysteresis must be >= 1.0, got {self.hysteresis}")
+
+    def ladder(self, edge_capacity: int, n_nodes: int) -> tuple[
+            tuple[int, int], ...]:
+        """Ascending ``(edge_cap, node_cap)`` rungs, top = full capacity."""
+        caps: list[int] = []
+        c = self.min_capacity
+        for _ in range(self.n_buckets - 1):
+            if c >= edge_capacity:
+                break
+            caps.append(int(c))
+            c *= self.growth
+        caps.append(int(edge_capacity))
+        return tuple(
+            (ec, n_nodes if ec == edge_capacity else min(ec, n_nodes))
+            for ec in caps)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,7 +201,7 @@ class FrontierApp:
 
 
 class FrontierPipeline:
-    """Single-compile frontier runtime over one (graph, app) pair.
+    """Bucketed single-compile frontier runtime over one (graph, app) pair.
 
     ``mode`` selects the reorder stage from one code path:
 
@@ -129,6 +215,10 @@ class FrontierPipeline:
     ``iru_config`` carries the geometry; its ``mode``/``filter_op`` are
     overridden by ``mode`` and the app's op (``hash_ref`` is host-only and
     rejected — the pipeline is the device path).
+
+    ``capacity_policy`` buckets the compiled capacities (see
+    ``CapacityPolicy``); the default single bucket at ``edge_capacity``
+    reproduces the fixed-capacity pipeline exactly.
     """
 
     def __init__(
@@ -140,6 +230,7 @@ class FrontierPipeline:
         iru_config: Optional[IRUConfig] = None,
         max_iters: Optional[int] = None,
         edge_capacity: Optional[int] = None,
+        capacity_policy: Optional[CapacityPolicy] = None,
         gather: str = "xla",
     ):
         if mode not in ("baseline", "sort", "hash"):
@@ -158,19 +249,45 @@ class FrontierPipeline:
         else:
             self.iru_config = dataclasses.replace(
                 iru_config or IRUConfig(), mode=mode, filter_op=app.filter_op)
-        self.n_traces = 0  # whole-run compiles (tests assert exactly 1)
-        self._run = jax.jit(self._run_impl)
-        self._step = jax.jit(self._step_impl)
+        self.capacity_policy = capacity_policy or CapacityPolicy()
+        # ascending (edge_cap, node_cap) rungs; top rung == full capacity
+        self.buckets = self.capacity_policy.ladder(
+            self.edge_capacity, graph.n_nodes)
+        self.n_traces = 0  # whole-run compiles (tests assert <= n_buckets)
+        self.n_hops = 0    # host bucket dispatches across run() calls
+        self._run_b = tuple(
+            jax.jit(functools.partial(self._run_impl, bucket=b))
+            for b in range(len(self.buckets)))
+        self._step_b = tuple(
+            jax.jit(functools.partial(self._step_impl, bucket=b))
+            for b in range(len(self.buckets)))
+        # the top-bucket step is the historical fixed-capacity step
+        self._step = self._step_b[-1]
+        self._predict = jax.jit(self._predict_impl)
+
+    # -- bucket dispatch ---------------------------------------------------
+    def _predict_impl(self, g, mask):
+        """Next iteration's exact working set: (degree sum, node count)."""
+        return (frontier_degree_sum(g, mask),
+                jnp.sum(mask.astype(jnp.int32)))
+
+    def _host_bucket(self, need: int, count: int) -> int:
+        for i, (e_cap, f_cap) in enumerate(self.buckets):
+            if need <= e_cap and count <= f_cap:
+                return i
+        return len(self.buckets) - 1
 
     # -- one pipeline iteration (expand → reorder → merge → update) --------
-    def _step_impl(self, g, state, mask):
+    def _step_impl(self, g, state, mask, bucket: int):
         # ``g`` rides as a jit argument (CSRGraph is a pytree), not a baked
         # closure constant: the executable is reusable across same-shape
-        # graphs and the HLO carries no giant literals
+        # graphs and the HLO carries no giant literals.  ``bucket`` is a
+        # static Python int — one executable per rung.
         app = self.app
         n = g.n_nodes
-        nodes = frontier_from_mask(mask)
-        ef = expand_frontier(g, nodes, edge_capacity=self.edge_capacity,
+        e_cap, f_cap = self.buckets[bucket]
+        nodes = frontier_from_mask(mask, size=f_cap)
+        ef = expand_frontier(g, nodes, edge_capacity=e_cap,
                              gather=self.gather,
                              with_weights=app.needs_weights)
         vals = app.candidate(state, g, ef)
@@ -195,42 +312,130 @@ class FrontierPipeline:
         new_target = _scatter(state[app.target], idx, svals, act,
                               app.filter_op)
         state, mask = app.update(state, new_target, g)
-        return state, mask, idx, act, real, n_edges
+        return state, mask, idx, act, real, n_edges, ef.overflow
 
-    def _run_impl(self, g, state, mask):
+    def _run_impl(self, g, state, mask, it, bucket: int):
         self.n_traces += 1  # python body: executes per trace, not per call
+        top = len(self.buckets) - 1
+
+        # a caller-shrunk edge_capacity (< n_edges) makes even the top rung
+        # overflowable; guard it in the loop condition so control returns to
+        # the host (which raises) instead of silently truncating.  The
+        # default full-capacity single bucket compiles exactly the
+        # pre-bucketing loop (no fit test at all).
+        shrunk = self.edge_capacity < self.graph.n_edges
 
         def cond(carry):
-            s, m, it = carry
-            return self.app.cond(s, m) & (it < self.max_iters)
+            s, m, i = carry
+            ok = self.app.cond(s, m) & (i < self.max_iters)
+            if top > 0 or shrunk:
+                need, count = self._predict_impl(g, m)
+                if bucket < top or shrunk:
+                    # the next frontier must still FIT this rung (exceeding
+                    # it returns to the host, which hops up)
+                    e_cap, f_cap = self.buckets[bucket]
+                    ok &= (need <= e_cap) & (count <= f_cap)
+                if bucket > 0:
+                    # down-hop hysteresis: leave for a smaller rung only
+                    # once the frontier fits the rung below with margin —
+                    # a frontier jittering around a rung boundary must not
+                    # degenerate to one host round trip per iteration (a
+                    # wide margin would instead trap smooth decaying
+                    # frontiers a rung too high; CapacityPolicy.hysteresis
+                    # picks the tradeoff).  Entry guarantee: the host
+                    # dispatches the smallest FITTING rung, so at loop
+                    # entry either need or count exceeds the rung below
+                    # (hence the static threshold, <= pe_cap) and this
+                    # term is True — the loop always makes >= 1 iteration
+                    # of progress.
+                    pe_cap, pf_cap = self.buckets[bucket - 1]
+                    h = self.capacity_policy.hysteresis
+                    # same margin on both axes: a node count jittering
+                    # around the rung-below node cap must not ping-pong
+                    # any more than a degree sum around its edge cap
+                    ok &= ((need > int(pe_cap / h))
+                           | (count > int(pf_cap / h)))
+            return ok
 
         def body(carry):
-            s, m, it = carry
-            s, m, *_ = self._step_impl(g, s, m)
-            return s, m, it + 1
+            s, m, i = carry
+            s, m, *_ = self._step_impl(g, s, m, bucket)
+            return s, m, i + 1
 
-        state, _, _ = jax.lax.while_loop(
-            cond, body, (state, mask, jnp.int32(0)))
-        return state
+        return jax.lax.while_loop(cond, body, (state, mask, it))
 
     # -- public drivers ----------------------------------------------------
     def init(self, source: int = 0) -> tuple[State, jax.Array]:
         return self.app.init(self.graph, source)
 
     def run(self, source: int = 0) -> jax.Array:
-        """Whole traversal in one compiled call (zero host work inside)."""
+        """Whole traversal through the compiled bucket executables.
+
+        Single-bucket policies make ONE device call (zero host work
+        inside); multi-bucket policies hop executables on the host only
+        when the predicted frontier crosses a bucket boundary.  Either
+        way ``n_traces <= n_buckets``.
+        """
         state, mask = self.init(source)
-        return self.app.result(self._run(self.graph, state, mask))
+        it = jnp.int32(0)
+        shrunk = self.edge_capacity < self.graph.n_edges
+        if len(self.buckets) == 1 and not shrunk:
+            state, _, _ = self._run_b[0](self.graph, state, mask, it)
+        else:
+            while (int(it) < self.max_iters
+                   and bool(self.app.cond(state, mask))):
+                need, count = self._predict(self.graph, mask)
+                if shrunk and int(need) > self.buckets[-1][0]:
+                    raise RuntimeError(
+                        f"frontier degree sum {int(need)} overflows the "
+                        f"shrunk edge_capacity={self.edge_capacity}: edges "
+                        f"would be dropped — raise edge_capacity")
+                b = self._host_bucket(int(need), int(count))
+                self.n_hops += 1
+                state, mask, it = self._run_b[b](
+                    self.graph, state, mask, it)
+        assert self.n_traces <= len(self.buckets), (
+            f"pipeline traced {self.n_traces}x for "
+            f"{len(self.buckets)} buckets — executables not reused")
+        return self.app.result(state)
+
+    def _step_dispatch(self, state, mask):
+        """One step at the smallest fitting bucket, re-dispatched upward on
+        overflow (misprediction can only come from a caller-shrunk
+        ``edge_capacity``; the predictor itself is exact).  Returns the step
+        outputs plus the bucket that serviced it."""
+        if len(self.buckets) == 1 and self.edge_capacity >= self.graph.n_edges:
+            # default full-capacity single bucket: the choice is forced and
+            # a mask-derived frontier cannot overflow n_edges — skip the
+            # predict round trip (the pre-bucketing step path exactly)
+            return self._step_b[0](self.graph, state, mask), 0
+        need, count = self._predict(self.graph, mask)
+        b = self._host_bucket(int(need), int(count))
+        while True:
+            out = self._step_b[b](self.graph, state, mask)
+            if not bool(out[-1]):  # overflow flag
+                return out, b
+            if b == len(self.buckets) - 1:
+                raise RuntimeError(
+                    f"expansion overflowed the top bucket "
+                    f"(edge_capacity={self.edge_capacity}): the frontier's "
+                    f"degree sum exceeds the compiled capacity — raise "
+                    f"edge_capacity (duplicated frontier ids can also "
+                    f"inflate the degree sum)")
+            b += 1
 
     def run_instrumented(self, source: int = 0, *, recorder=None) -> jax.Array:
-        """Host-stepped traversal over the same compiled step, feeding a
+        """Host-stepped traversal over the same compiled steps, feeding a
         ``apps.trace.TraceRecorder`` per iteration — the single
-        instrumentation point for baseline/sort/hash measurement."""
+        instrumentation point for baseline/sort/hash measurement.  Buckets
+        dispatch per step; an overflowed step (possible only with a
+        caller-shrunk ``edge_capacity``) is re-dispatched one rung up
+        instead of silently truncating."""
         state, mask = self.init(source)
         it = 0
         while it < self.max_iters and bool(np.asarray(self.app.cond(state, mask))):
-            state, mask, idx, act, real, n_edges = self._step(
-                self.graph, state, mask)
+            (state, mask, idx, act, real, n_edges, _), _ = \
+                self._step_dispatch(state, mask)
             it += 1
             if recorder is not None:
                 if self.mode != "baseline":

@@ -4,9 +4,11 @@ from repro.graphs.csr import (
     EdgeFrontier,
     expand_frontier,
     from_edges,
+    frontier_degree_sum,
     frontier_from_mask,
 )
 from repro.graphs.generators import DATASETS, make_dataset
 
 __all__ = ["CSRGraph", "EdgeFrontier", "expand_frontier", "from_edges",
-           "frontier_from_mask", "DATASETS", "make_dataset"]
+           "frontier_degree_sum", "frontier_from_mask", "DATASETS",
+           "make_dataset"]

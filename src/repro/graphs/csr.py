@@ -6,6 +6,9 @@ Arrays live as jax arrays so apps can jit over them; builders accept numpy.
 ``core.pipeline`` runtime drives every iteration: fixed ``edge_capacity``
 output shapes (padding lanes carry ``valid=False``) make it legal inside
 ``lax.while_loop`` — no host round trip, no retracing across iterations.
+:func:`frontier_degree_sum` predicts the exact lane count an expansion will
+emit (the dispatch reduction of the pipeline's capacity bucketing), and a
+truncated expansion reports itself through ``EdgeFrontier.overflow``.
 """
 from __future__ import annotations
 
@@ -36,9 +39,17 @@ class CSRGraph:
         return self.row_ptr[1:] - self.row_ptr[:-1]
 
     def edge_sources(self) -> jax.Array:
-        """int32[n_edges] source node of each edge (expanded row_ptr)."""
-        deg = np.asarray(self.degrees())
-        return jnp.asarray(np.repeat(np.arange(self.n_nodes, dtype=np.int32), deg))
+        """int32[n_edges] source node of each edge (expanded row_ptr).
+
+        Pure-jnp (``searchsorted`` over ``row_ptr`` — the same
+        load-balanced-search form :func:`expand_frontier` uses), so it is
+        legal under ``jit``: edge ``e`` belongs to the last node whose CSR
+        range starts at or before ``e`` (degree-0 nodes contribute repeated
+        ``row_ptr`` entries and are skipped by ``side="right"``).
+        """
+        e = jnp.arange(self.n_edges, dtype=self.row_ptr.dtype)
+        return (jnp.searchsorted(self.row_ptr, e, side="right") - 1).astype(
+            jnp.int32)
 
     def avg_degree(self) -> float:
         return self.n_edges / max(self.n_nodes, 1)
@@ -54,18 +65,66 @@ class EdgeFrontier(NamedTuple):
     #                    the block-reuse gather's window contract survives)
     valid: jax.Array   # bool  True on real edge lanes
     weights: jax.Array | None = None  # f32 edge weight per lane (on request)
+    overflow: jax.Array | None = None  # bool scalar: the frontier's degree
+    #                    sum exceeded edge_capacity, so edges were DROPPED —
+    #                    the consumer must re-dispatch at a larger capacity
+    #                    (what core.pipeline's bucketed dispatch does)
 
 
-def frontier_from_mask(mask: jax.Array) -> jax.Array:
+def frontier_from_mask(mask: jax.Array, *, size: int | None = None) -> jax.Array:
     """Dense frontier mask -> capacity-padded ascending node list.
 
-    Returns int32[n_nodes]; tail lanes past the frontier size carry the
-    sentinel ``n_nodes`` (which :func:`expand_frontier` expands to nothing).
-    Ascending order matters: it makes the CSR offsets of the expansion
-    monotone, which is what the block-reuse gather kernel exploits.
+    Returns int32[size] (default ``n_nodes``); tail lanes past the frontier
+    size carry the sentinel ``n_nodes`` (which :func:`expand_frontier`
+    expands to nothing).  Ascending order matters: it makes the CSR offsets
+    of the expansion monotone, which is what the block-reuse gather kernel
+    exploits.
+
+    ``size`` bounds the output — the frontier-compaction knob of the
+    capacity-bucketed pipeline (``core.pipeline.CapacityPolicy``): a sparse
+    frontier no longer drags ``n_nodes`` lanes through expansion.  Like
+    ``jnp.nonzero(size=...)``, a mask with MORE than ``size`` set bits is
+    silently truncated; callers shrinking it take on the same obligation as
+    :func:`expand_frontier`'s ``edge_capacity`` — bound the popcount
+    themselves (the pipeline predicts it per iteration).
     """
     n = mask.shape[0]
-    return jnp.nonzero(mask, size=n, fill_value=n)[0].astype(jnp.int32)
+    return jnp.nonzero(mask, size=n if size is None else size,
+                       fill_value=n)[0].astype(jnp.int32)
+
+
+def _frontier_counts(
+    graph: CSRGraph, frontier: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-node (clipped ids, CSR starts, degree counts) of a node list.
+
+    Out-of-range ids (the ``>= n_nodes`` sentinel of
+    :func:`frontier_from_mask`, but also any stray negative id — the banked
+    engine's other padding convention) count zero edges.
+    """
+    n = graph.n_nodes
+    f = frontier.astype(jnp.int32)
+    in_range = (f >= 0) & (f < n)
+    fc = jnp.clip(f, 0, max(n - 1, 0))
+    starts = graph.row_ptr[fc]
+    counts = jnp.where(in_range, graph.row_ptr[fc + 1] - starts, 0)
+    return fc, starts, counts
+
+
+def frontier_degree_sum(graph: CSRGraph, frontier: jax.Array) -> jax.Array:
+    """Exact lane count :func:`expand_frontier` will emit (int32 scalar).
+
+    ``frontier`` is either a dense bool[n_nodes] mask or a padded int32 node
+    list (both frontier representations the pipeline carries).  This is the
+    cheap device reduction the capacity-bucketed dispatch predicts each
+    iteration's working set from — O(F) adds against an O(capacity)
+    expansion.
+    """
+    if frontier.dtype == jnp.bool_:
+        return jnp.sum(
+            jnp.where(frontier, graph.degrees(), 0)).astype(jnp.int32)
+    _, _, counts = _frontier_counts(graph, frontier)
+    return jnp.sum(counts).astype(jnp.int32)
 
 
 def expand_frontier(
@@ -93,26 +152,37 @@ def expand_frontier(
 
     PRECONDITION: frontier node ids must be UNIQUE (what
     :func:`frontier_from_mask` produces by construction).  The expansion
-    emits at most ``edge_capacity`` lanes and TRUNCATES silently past it
-    (static shapes leave no way to raise under jit); the default capacity
-    ``n_edges`` is exactly the bound a unique-node frontier can never
-    exceed, but a duplicated id inflates the degree sum past it and drops
-    edges.  Callers shrinking ``edge_capacity`` below ``n_edges`` take on
-    the same obligation: bound the frontier's degree sum themselves.
+    emits at most ``edge_capacity`` lanes; past it edges are DROPPED (static
+    shapes leave no way to raise under jit), but the truncation is no longer
+    silent: the returned ``overflow`` flag is True whenever the frontier's
+    degree sum exceeded the capacity, so callers shrinking ``edge_capacity``
+    below ``n_edges`` (or feeding duplicated ids, which inflate the degree
+    sum past the default ``n_edges`` bound) can detect the miss and
+    re-dispatch at a larger capacity — what ``core.pipeline``'s bucketed
+    dispatch does.  :func:`frontier_degree_sum` is the matching predictor.
     """
     n = graph.n_nodes
     cap = graph.n_edges if edge_capacity is None else edge_capacity
     f = frontier.astype(jnp.int32)
     F = f.shape[0]
-    # out-of-range ids (the >= n sentinel, but also any stray negative id —
-    # the banked engine's other padding convention) expand to nothing
-    in_range = (f >= 0) & (f < n)
-    fc = jnp.clip(f, 0, n - 1)
-    starts = graph.row_ptr[fc]
-    counts = jnp.where(in_range, graph.row_ptr[fc + 1] - starts, 0)
-    cum = jnp.cumsum(counts)
-    total = cum[F - 1] if F else jnp.int32(0)
+    fc, starts, counts = _frontier_counts(graph, f)
 
+    if F == 0 or cap == 0:
+        # degenerate shapes: cum[k]/counts[k] gathers are ill-formed at F=0
+        # and the pad-offset max has no identity at cap=0 — both collapse to
+        # an all-padding frontier (cap=0 can still overflow: edges exist but
+        # zero lanes were compiled for them)
+        return EdgeFrontier(
+            srcs=jnp.full((cap,), n, jnp.int32),
+            dsts=jnp.full((cap,), n, jnp.int32),
+            eids=jnp.zeros((cap,), jnp.int32),
+            valid=jnp.zeros((cap,), jnp.bool_),
+            weights=jnp.zeros((cap,), graph.weights.dtype) if with_weights
+            else None,
+            overflow=jnp.sum(counts).astype(jnp.int32) > cap)
+
+    cum = jnp.cumsum(counts)
+    total = cum[F - 1]
     lane = jnp.arange(cap, dtype=jnp.int32)
     valid = lane < total
     k = jnp.clip(jnp.searchsorted(cum, lane, side="right"), 0, F - 1)
@@ -142,7 +212,7 @@ def expand_frontier(
     else:
         raise ValueError(f"unknown gather backend {gather!r}")
     dsts = jnp.where(valid, dsts, n).astype(jnp.int32)
-    return EdgeFrontier(srcs, dsts, eids, valid, weights)
+    return EdgeFrontier(srcs, dsts, eids, valid, weights, total > cap)
 
 
 def from_edges(
