@@ -5,7 +5,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-ci test-fast bench bench-quick bench-iru bench-iru-quick \
-	bench-apps-quick smoke-pipeline
+	bench-apps-quick bench-serving smoke-pipeline smoke-graph-serving
 
 test:
 	$(PY) -m pytest -x -q
@@ -45,3 +45,13 @@ bench-apps-quick:
 # run with a forced bucket hop — the CI smoke
 smoke-pipeline:
 	$(PY) -m benchmarks.pipeline_smoke
+
+# 8 mixed BFS/SSSP/PPR queries through a 4-slot GraphServingEngine with the
+# Pallas interpret gather and one injected capacity overflow: quarantine +
+# solo retry must recover every tenant bit-identical — the CI serving smoke
+smoke-graph-serving:
+	$(PY) -m benchmarks.graph_serving_smoke
+
+# refresh only the multi-tenant serving rows of BENCH_iru.json
+bench-serving:
+	$(PY) -m benchmarks.iru_throughput --serving-only

@@ -22,9 +22,11 @@ from repro.apps.pagerank import (
     pagerank_jit,
     pagerank_pipeline,
 )
+from repro.apps.ppr import ppr, ppr_app, ppr_pipeline
 from repro.apps.sssp import SSSP_APP, sssp, sssp_pipeline
 from repro.apps.trace import TraceRecorder
 
 __all__ = ["BFS_APP", "SSSP_APP", "TraceRecorder", "bfs", "bfs_jit",
            "bfs_pipeline", "pagerank", "pagerank_app", "pagerank_jit",
-           "pagerank_pipeline", "sssp", "sssp_pipeline"]
+           "pagerank_pipeline", "ppr", "ppr_app", "ppr_pipeline", "sssp",
+           "sssp_pipeline"]

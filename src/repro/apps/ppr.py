@@ -1,0 +1,113 @@
+"""Personalized PageRank (PPR) as a frontier app.
+
+Same push datapath as :mod:`repro.apps.pagerank` — every edge pushes
+``rank[src]/deg[src]`` into ``atomicAdd(&acc[dst], w)``, the IRU's fp-add
+merge pre-sums duplicate destinations — but the teleport vector is a single
+source node instead of uniform: random walks restart at the query's seed, so
+the stationary vector concentrates around it.  PPR is the per-user flavour
+of PageRank (recommendation / similarity queries), which is what makes it
+the third query kind of the multi-tenant graph serving engine
+(``serve.graph_engine``): every user seeds their own walk.
+
+Dangling mass also returns to the seed (the personalized restart), keeping
+each iteration's total mass at 1.
+
+``ppr_app`` declares the solo app to ``core.pipeline.FrontierPipeline`` (the
+frontier is all nodes every iteration, like PageRank); ``ppr_pipeline`` is
+the convenience driver; ``ppr`` is the host numpy parity oracle.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import IRUConfig
+from repro.core.pipeline import CapacityPolicy, FrontierApp, FrontierPipeline
+from repro.graphs.csr import CSRGraph
+
+
+def ppr(
+    graph: CSRGraph,
+    source: int = 0,
+    *,
+    iters: int = 20,
+    damping: float = 0.85,
+) -> np.ndarray:
+    """Host numpy parity oracle (sequential fp-add accumulation)."""
+    n = graph.n_nodes
+    srcs = np.asarray(graph.edge_sources())
+    dsts = np.asarray(graph.col_idx)
+    deg = np.maximum(np.asarray(graph.degrees()), 1).astype(np.float32)
+    dangling = np.asarray(graph.degrees()) == 0
+    e_src = np.zeros(n, np.float32)
+    e_src[source] = 1.0
+    rank = e_src.copy()
+    d = np.float32(damping)
+    for _ in range(iters):
+        contrib = (rank / deg)[srcs]
+        acc = np.zeros(n, np.float32)
+        np.add.at(acc, dsts, contrib)
+        leak = rank[dangling].sum(dtype=np.float32)
+        rank = ((1 - d) * e_src + d * acc + d * leak * e_src).astype(
+            np.float32)
+    return rank
+
+
+def ppr_app(iters: int = 20, damping: float = 0.85) -> FrontierApp:
+    """PPR as a frontier app: all-nodes frontier, iteration-budget
+    convergence, seed-personalized teleport and dangling restart."""
+
+    def init(graph: CSRGraph, source: int):
+        n = graph.n_nodes
+        e_src = jnp.zeros((n,), jnp.float32).at[source].set(1.0)
+        state = {"rank": e_src, "src": e_src,
+                 "acc": jnp.zeros((n,), jnp.float32), "it": jnp.int32(0)}
+        return state, jnp.ones((n,), jnp.bool_)
+
+    def candidate(state, graph: CSRGraph, ef):
+        deg = jnp.maximum(graph.degrees(), 1).astype(jnp.float32)
+        return (state["rank"] / deg)[ef.srcs]
+
+    def update(state, acc, graph: CSRGraph):
+        dangling = graph.degrees() == 0
+        leak = jnp.sum(jnp.where(dangling, state["rank"], 0.0))
+        d = jnp.float32(damping)
+        rank = ((1 - d) * state["src"] + d * acc
+                + d * leak * state["src"]).astype(jnp.float32)
+        state = {"rank": rank, "src": state["src"],
+                 "acc": jnp.zeros_like(acc), "it": state["it"] + 1}
+        return state, jnp.ones_like(rank, jnp.bool_)
+
+    return FrontierApp(
+        name="ppr",
+        filter_op="add",      # the merged atomicAdd datapath
+        target="acc",
+        init=init,
+        candidate=candidate,
+        update=update,
+        cond=lambda state, mask: state["it"] < iters,
+        result=lambda state: state["rank"],
+        atomic=True,
+    )
+
+
+def ppr_pipeline(
+    graph: CSRGraph,
+    source: int = 0,
+    *,
+    iters: int = 20,
+    damping: float = 0.85,
+    mode: str = "baseline",
+    iru_config: Optional[IRUConfig] = None,
+    capacity_policy: Optional[CapacityPolicy] = None,
+    **pipeline_kw,
+) -> np.ndarray:
+    """Device-resident PPR via ``FrontierPipeline`` (the solo reference the
+    serving engine's multi-query results are checked against)."""
+    pipe = FrontierPipeline(graph, ppr_app(iters, damping), mode=mode,
+                            iru_config=iru_config,
+                            capacity_policy=capacity_policy, max_iters=iters,
+                            **pipeline_kw)
+    return np.asarray(pipe.run(source))

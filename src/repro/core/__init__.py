@@ -20,7 +20,7 @@ from repro.core.iru import (
     reorder_frontier,
 )
 from repro.core.pipeline import (CapacityPolicy, FrontierApp,
-                                 FrontierPipeline)
+                                 FrontierPipeline, StepResult)
 
 __all__ = [
     "BLOCK_BYTES",
@@ -30,6 +30,7 @@ __all__ = [
     "GROUP",
     "IRUConfig",
     "IRUStream",
+    "StepResult",
     "accesses_per_group",
     "block_ids",
     "coalescing_improvement",

@@ -59,7 +59,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Optional
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -159,6 +159,25 @@ class CapacityPolicy:
         return tuple(
             (ec, n_nodes if ec == edge_capacity else min(ec, n_nodes))
             for ec in caps)
+
+
+class StepResult(NamedTuple):
+    """One dispatched pipeline step (see :meth:`FrontierPipeline.step`).
+
+    On ``overflow=True`` (only reachable with ``raise_on_overflow=False``)
+    ``state``/``mask`` are the UNCHANGED inputs — the overflowed step's
+    outputs were truncated and must be discarded; the caller decides how to
+    shed load (the serving engine quarantines a tenant and retries).
+    """
+
+    state: Any
+    mask: jax.Array
+    idx: jax.Array
+    act: jax.Array
+    real: jax.Array
+    n_edges: jax.Array
+    overflow: bool
+    bucket: int
 
 
 @dataclasses.dataclass(frozen=True)
@@ -399,30 +418,48 @@ class FrontierPipeline:
             f"{len(self.buckets)} buckets — executables not reused")
         return self.app.result(state)
 
-    def _step_dispatch(self, state, mask):
+    def step(self, state, mask, *, raise_on_overflow: bool = True
+             ) -> StepResult:
         """One step at the smallest fitting bucket, re-dispatched upward on
         overflow (misprediction can only come from a caller-shrunk
-        ``edge_capacity``; the predictor itself is exact).  Returns the step
-        outputs plus the bucket that serviced it."""
+        ``edge_capacity``; the predictor itself is exact).
+
+        This is the host-dispatched public step — what external drivers
+        that join/retire work between iterations (the multi-tenant
+        ``serve.graph_engine``) build on, and what ``run_instrumented``
+        steps.  With ``raise_on_overflow=False`` a top-bucket overflow is
+        returned as ``StepResult(overflow=True)`` carrying the UNCHANGED
+        input state/mask (the truncated outputs are discarded) instead of
+        raising, so a serving loop can shed load and retry rather than die.
+        """
         if len(self.buckets) == 1 and self.edge_capacity >= self.graph.n_edges:
             # default full-capacity single bucket: the choice is forced and
             # a mask-derived frontier cannot overflow n_edges — skip the
             # predict round trip (the pre-bucketing step path exactly)
-            return self._step_b[0](self.graph, state, mask), 0
+            return StepResult(*self._step_b[0](self.graph, state, mask), 0)
         need, count = self._predict(self.graph, mask)
         b = self._host_bucket(int(need), int(count))
         while True:
             out = self._step_b[b](self.graph, state, mask)
             if not bool(out[-1]):  # overflow flag
-                return out, b
+                return StepResult(*out[:-1], False, b)
             if b == len(self.buckets) - 1:
-                raise RuntimeError(
-                    f"expansion overflowed the top bucket "
-                    f"(edge_capacity={self.edge_capacity}): the frontier's "
-                    f"degree sum exceeds the compiled capacity — raise "
-                    f"edge_capacity (duplicated frontier ids can also "
-                    f"inflate the degree sum)")
+                if raise_on_overflow:
+                    raise RuntimeError(
+                        f"expansion overflowed the top bucket "
+                        f"(edge_capacity={self.edge_capacity}): the "
+                        f"frontier's degree sum exceeds the compiled "
+                        f"capacity — raise edge_capacity (duplicated "
+                        f"frontier ids can also inflate the degree sum)")
+                return StepResult(state, mask, out[2], out[3], out[4],
+                                  out[5], True, b)
             b += 1
+
+    def _step_dispatch(self, state, mask):
+        """Back-compat tuple form of :meth:`step`: ``(outputs, bucket)``."""
+        r = self.step(state, mask)
+        return (r.state, r.mask, r.idx, r.act, r.real, r.n_edges,
+                r.overflow), r.bucket
 
     def run_instrumented(self, source: int = 0, *, recorder=None) -> jax.Array:
         """Host-stepped traversal over the same compiled steps, feeding a

@@ -1,4 +1,25 @@
-from repro.ft.failures import FaultInjector, FaultPlan
-from repro.ft.supervisor import Supervisor, SupervisorConfig
+from repro.ft.failures import (
+    FaultInjector,
+    FaultPlan,
+    QueryFaultInjector,
+    QueryFaultPlan,
+    WorkerDied,
+)
+from repro.ft.supervisor import (
+    StragglerClock,
+    Supervisor,
+    SupervisorConfig,
+    backoff_delay,
+)
 
-__all__ = ["FaultInjector", "FaultPlan", "Supervisor", "SupervisorConfig"]
+__all__ = [
+    "FaultInjector",
+    "FaultPlan",
+    "QueryFaultInjector",
+    "QueryFaultPlan",
+    "StragglerClock",
+    "Supervisor",
+    "SupervisorConfig",
+    "WorkerDied",
+    "backoff_delay",
+]

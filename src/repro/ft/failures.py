@@ -1,10 +1,19 @@
-"""Deterministic fault injection for supervisor tests.
+"""Deterministic fault injection for supervisor and serving tests.
 
 At cluster scale the failure modes that matter per step are: a worker dying
 (preemption / hardware), a step hanging (network partition, straggler), and
 numerically poisoned updates (SDC, bad reduction).  ``FaultInjector`` raises
 or delays at scripted steps so tests can assert the supervisor's recovery
 behaviour without nondeterminism.
+
+The graph serving engine (``serve.graph_engine``) has its own failure
+vocabulary — a step's merged frontier blowing the compiled capacity, a query
+arriving with a poisoned source id, a tenant cancelled mid-flight, a
+pathological straggler — scripted the same way through ``QueryFaultPlan`` /
+``QueryFaultInjector``.  Both plans validate at construction (negative step
+indices are authoring bugs, not faults) and both injectors record what fired
+in a typed ``fired: set[tuple[str, int]]`` so tests can assert that every
+scripted fault actually happened.
 """
 from __future__ import annotations
 
@@ -16,6 +25,18 @@ class WorkerDied(RuntimeError):
     """Simulated node failure (preemption, hardware loss)."""
 
 
+def _check_steps(name: str, steps: tuple, *, pairs: bool = False) -> None:
+    """Reject negative step/tick indices in a fault schedule loudly."""
+    for s in steps:
+        if pairs:
+            qid, tick = s
+            if qid < 0 or tick < 0:
+                raise ValueError(
+                    f"{name} entries must be (id >= 0, step >= 0), got {s}")
+        elif s < 0:
+            raise ValueError(f"{name} step indices must be >= 0, got {s}")
+
+
 @dataclasses.dataclass(frozen=True)
 class FaultPlan:
     die_at: tuple[int, ...] = ()        # steps raising WorkerDied
@@ -23,11 +44,19 @@ class FaultPlan:
     nan_at: tuple[int, ...] = ()        # steps whose loss is poisoned to NaN
     hang_seconds: float = 0.2
 
+    def __post_init__(self):
+        _check_steps("die_at", self.die_at)
+        _check_steps("hang_at", self.hang_at)
+        _check_steps("nan_at", self.nan_at)
+        if self.hang_seconds < 0:
+            raise ValueError(
+                f"hang_seconds must be >= 0, got {self.hang_seconds}")
+
 
 @dataclasses.dataclass
 class FaultInjector:
     plan: FaultPlan = FaultPlan()
-    fired: set = dataclasses.field(default_factory=set)
+    fired: set[tuple[str, int]] = dataclasses.field(default_factory=set)
 
     def before_step(self, step: int) -> None:
         if step in self.plan.die_at and ("die", step) not in self.fired:
@@ -42,3 +71,76 @@ class FaultInjector:
             self.fired.add(("nan", step))
             return float("nan")
         return loss
+
+
+# ---------------------------------------------------------------------------
+# Graph-serving faults
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class QueryFaultPlan:
+    """Scripted faults for ``serve.graph_engine.GraphServingEngine``.
+
+    * ``overflow_at`` — engine ticks at which the merged step is forced to
+      report capacity overflow (as if a co-tenant blew the edge budget):
+      the engine must quarantine the largest predicted contributor instead
+      of truncating or poisoning co-tenants.
+    * ``poison_source`` — query ids whose source id is corrupted to
+      ``poison_value`` between submit-time validation and admission
+      (modeling an id that went stale / was corrupted in flight): the
+      engine must reject that query loudly at admission, never expand it.
+    * ``cancel_at`` — ``(query id, tick)`` pairs: the query is cancelled
+      mid-flight at that engine tick (a user disconnect).
+    * ``hang_at`` — ``(query id, tick)`` pairs: a stall of ``hang_seconds``
+      attributed to that query (a pathological straggler), for driving the
+      engine's EWMA wall-clock deadline.
+    """
+
+    overflow_at: tuple[int, ...] = ()
+    poison_source: tuple[int, ...] = ()
+    cancel_at: tuple[tuple[int, int], ...] = ()
+    hang_at: tuple[tuple[int, int], ...] = ()
+    hang_seconds: float = 0.05
+    poison_value: int = -1
+
+    def __post_init__(self):
+        _check_steps("overflow_at", self.overflow_at)
+        _check_steps("poison_source", self.poison_source)
+        _check_steps("cancel_at", self.cancel_at, pairs=True)
+        _check_steps("hang_at", self.hang_at, pairs=True)
+        if self.hang_seconds < 0:
+            raise ValueError(
+                f"hang_seconds must be >= 0, got {self.hang_seconds}")
+
+
+@dataclasses.dataclass
+class QueryFaultInjector:
+    """Fires each scripted query fault exactly once (typed ``fired`` set,
+    same once-per-entry contract as :class:`FaultInjector`)."""
+
+    plan: QueryFaultPlan = QueryFaultPlan()
+    fired: set[tuple[str, int]] = dataclasses.field(default_factory=set)
+
+    def force_overflow(self, tick: int) -> bool:
+        if tick in self.plan.overflow_at and ("overflow", tick) not in self.fired:
+            self.fired.add(("overflow", tick))
+            return True
+        return False
+
+    def admitted_source(self, qid: int, source: int) -> int:
+        """The source id the engine actually sees at admission."""
+        if qid in self.plan.poison_source and ("poison", qid) not in self.fired:
+            self.fired.add(("poison", qid))
+            return self.plan.poison_value
+        return source
+
+    def should_cancel(self, qid: int, tick: int) -> bool:
+        if (qid, tick) in self.plan.cancel_at and ("cancel", qid) not in self.fired:
+            self.fired.add(("cancel", qid))
+            return True
+        return False
+
+    def stall(self, qid: int, tick: int) -> None:
+        if (qid, tick) in self.plan.hang_at and ("qhang", qid * 1_000_003 + tick) not in self.fired:
+            self.fired.add(("qhang", qid * 1_000_003 + tick))
+            time.sleep(self.plan.hang_seconds)

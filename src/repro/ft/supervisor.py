@@ -41,6 +41,45 @@ class SupervisorConfig:
     ewma: float = 0.9
 
 
+def backoff_delay(base_s: float, attempt: int) -> float:
+    """Exponential backoff schedule (attempt 1 -> base, 2 -> 2x, ...).
+
+    The bounded-retry delay shared by the training supervisor (restart
+    spacing) and the graph serving engine (quarantined-query retries).
+    """
+    return base_s * (2 ** max(attempt - 1, 0))
+
+
+@dataclasses.dataclass
+class StragglerClock:
+    """EWMA wall-clock deadline — the straggler policy, factored out.
+
+    ``observe(dt)`` folds a new duration into the EWMA and reports whether
+    that duration was a straggle (``dt > factor * ewma``, with the new
+    observation already folded in — a straggler inflates its own baseline
+    by ``1 - ewma``, which keeps a persistent slowdown from being
+    re-flagged forever).  ``deadline(floor)`` is the absolute wall-clock
+    bound derived from the current average, for consumers that supervise
+    open-ended work (the serving engine cancels queries whose age exceeds
+    it) rather than per-step durations.
+    """
+
+    factor: float = 3.0
+    ewma: float = 0.9
+    avg: Optional[float] = None
+
+    def observe(self, dt: float) -> bool:
+        self.avg = (dt if self.avg is None
+                    else self.ewma * self.avg + (1 - self.ewma) * dt)
+        return dt > self.factor * max(self.avg, 1e-9)
+
+    def deadline(self, floor: float = 0.0) -> Optional[float]:
+        """Wall-clock budget implied by the EWMA (None until first sample)."""
+        if self.avg is None:
+            return None
+        return max(self.factor * self.avg, floor)
+
+
 @dataclasses.dataclass
 class Supervisor:
     manager: CheckpointManager
@@ -64,7 +103,7 @@ class Supervisor:
         """Run ``num_steps`` with recovery. Returns (state, last_step)."""
         cfg = self.config
         step = start_step
-        ewma_dt: Optional[float] = None
+        clock = StragglerClock(cfg.straggler_factor, cfg.ewma)
         consecutive_slow = 0
         while step < start_step + num_steps:
             try:
@@ -91,8 +130,7 @@ class Supervisor:
                         step = self._restored_step(step)
                     continue
 
-                ewma_dt = dt if ewma_dt is None else cfg.ewma * ewma_dt + (1 - cfg.ewma) * dt
-                if ewma_dt is not None and dt > cfg.straggler_factor * max(ewma_dt, 1e-9) and step > start_step:
+                if clock.observe(dt) and step > start_step:
                     consecutive_slow += 1
                     self.straggles += 1
                     if consecutive_slow >= cfg.max_straggles:
@@ -111,7 +149,7 @@ class Supervisor:
                 self.restarts += 1
                 if self.restarts > cfg.max_restarts:
                     raise
-                time.sleep(cfg.backoff_base_s * (2 ** (self.restarts - 1)))
+                time.sleep(backoff_delay(cfg.backoff_base_s, self.restarts))
                 state = self._restore(state)
                 step = self._restored_step(step)
         self.manager.save(step, state, blocking=True)

@@ -215,6 +215,44 @@ def expand_frontier(
     return EdgeFrontier(srcs, dsts, eids, valid, weights, total > cap)
 
 
+def tile_csr(graph: CSRGraph, copies: int) -> CSRGraph:
+    """``copies`` disjoint replicas of ``graph`` as ONE composite CSR.
+
+    Replica ``q``'s node ``v`` becomes composite node ``q * n_nodes + v``;
+    its edges shift likewise, so the replicas are disconnected components
+    sharing one ``row_ptr`` / ``col_idx``.  This is the graph twin of
+    slot-leased continuous batching (``serve.engine``): a multi-query
+    frontier over the replicas is a single frontier of composite
+    ``(query, node)`` ids — the query id rides in the high bits of the node
+    id — so the whole bucketed ``FrontierPipeline`` machinery (expansion,
+    degree-sum prediction, capacity ladder, reorder/merge) applies
+    unchanged, and duplicate filtering / merging can only ever combine
+    lanes WITHIN one query (composite ids never collide across replicas).
+
+    Memory is ``copies``x the base graph — the serving engine's slot count
+    is the knob, exactly as a decode engine's batch slots size its KV cache.
+    """
+    if copies < 1:
+        raise ValueError(f"copies must be >= 1, got {copies}")
+    n, m = graph.n_nodes, graph.n_edges
+    if copies * max(n, 1) >= 2**31 or copies * max(m, 1) >= 2**31:
+        raise ValueError(
+            f"composite graph of {copies} x ({n} nodes, {m} edges) "
+            f"overflows int32 ids")
+    q = jnp.arange(copies, dtype=jnp.int32)
+    # composite row_ptr[c*n + v] = c*m + row_ptr[v]; interior replica
+    # boundaries coincide ((c-1)*m + row_ptr[n] == c*m + row_ptr[0]), so
+    # tiling the tail row_ptr[1:] per replica and re-prepending 0 is exact
+    row_ptr = jnp.concatenate([
+        jnp.zeros((1,), jnp.int32),
+        (graph.row_ptr[None, 1:] + q[:, None] * m).reshape(-1),
+    ]).astype(jnp.int32)
+    col_idx = (graph.col_idx[None, :] + q[:, None] * n).reshape(-1).astype(
+        jnp.int32)
+    return CSRGraph(row_ptr=row_ptr, col_idx=col_idx,
+                    weights=jnp.tile(graph.weights, copies))
+
+
 def from_edges(
     src: np.ndarray,
     dst: np.ndarray,

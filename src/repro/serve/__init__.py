@@ -1,3 +1,12 @@
 from repro.serve.engine import Request, ServeConfig, ServingEngine
+from repro.serve.graph_engine import (
+    AdmissionError,
+    GraphQuery,
+    GraphServeConfig,
+    GraphServingEngine,
+    QueueFullError,
+)
 
-__all__ = ["Request", "ServeConfig", "ServingEngine"]
+__all__ = ["AdmissionError", "GraphQuery", "GraphServeConfig",
+           "GraphServingEngine", "QueueFullError", "Request", "ServeConfig",
+           "ServingEngine"]

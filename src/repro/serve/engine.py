@@ -129,6 +129,17 @@ class ServingEngine:
             self.pos[slot] += 1
 
     def run_to_completion(self, max_ticks: int = 10_000) -> None:
+        """Drive ticks until every request resolves.
+
+        Raises ``TimeoutError`` naming the stuck request ids if the budget
+        runs out — a serving loop that gives up must say which tenants it
+        abandoned, never return as if it drained the queue.
+        """
         for _ in range(max_ticks):
             if self.tick() == 0 and not self.queue:
-                break
+                return
+        stuck = sorted([r.rid for r in self.active if r is not None]
+                       + [r.rid for r in self.queue])
+        raise TimeoutError(
+            f"serving engine exhausted max_ticks={max_ticks} with requests "
+            f"still in flight: rids={stuck}")

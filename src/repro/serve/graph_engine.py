@@ -1,0 +1,635 @@
+"""Fault-tolerant multi-tenant graph query serving.
+
+``GraphServingEngine`` is the graph twin of the slot-leased continuous
+batching ``ServingEngine`` (``serve.engine``): many concurrent traversal
+queries — BFS / SSSP / PPR, different source nodes, different users — are
+multiplexed into ONE compiled bucketed ``FrontierPipeline`` step, and
+queries join and retire mid-flight exactly like decode requests joining a
+batch slot.
+
+**The query-id lane.**  The engine leases ``query_slots`` lanes over a
+composite replica graph (``graphs.csr.tile_csr``): query ``q``'s node ``v``
+is composite node ``q * n_nodes + v``, so the merged frontier is a single
+stream of ``(query, node)`` ids the existing runtime consumes unchanged —
+expansion, degree-sum prediction, the capacity ladder, IRU reorder and the
+merge datapath all see ordinary node ids.  Because composite ids never
+collide across replicas, duplicate filtering and merging combine lanes only
+WITHIN a query — the per-tenant isolation invariant the property tests pin.
+
+**Merge families.**  One compiled step has one merge datapath, exactly as a
+GPU kernel commits to one atomic.  BFS and SSSP share the ``min`` family
+(BFS runs as unit-weight shortest paths in f32, converted back to int32
+hop labels on retirement — exact for any graph that fits memory); PPR is
+the ``add`` family.  Each family with active tenants advances by one batched
+step per engine tick; compiled executables are reused across ticks and
+tenants (``n_traces <= n_buckets`` per family, asserted in tests).
+
+**Robustness model** (the serving-side analogue of ``ft.supervisor``):
+
+* *Admission control* — a query is admitted only if
+
+      degsum(init_frontier_new) + Σ_running degsum(frontier_q)  <=  E_top
+
+  where ``degsum`` is ``graphs.csr.frontier_degree_sum`` and ``E_top`` the
+  top rung of the family's ``CapacityPolicy`` ladder (the engine's edge
+  budget, default ``query_slots * n_edges``): a new tenant can never push
+  the merged frontier past the largest compiled bucket.  The wait queue is
+  bounded (``max_queue``) and overflows loudly (``QueueFullError``); a
+  query that could never fit even alone is rejected at submit
+  (``AdmissionError``).
+* *Overflow quarantine* — frontiers grow mid-flight, so the per-tick
+  dispatch re-checks the predicted degree sum; if the merged frontier
+  outgrows the top bucket (or a step reports ``EdgeFrontier.overflow``, or
+  a fault plan forces one) the engine evicts the query with the LARGEST
+  predicted contribution and retries it solo — a fresh single-tenant
+  ``FrontierPipeline`` run at full base-graph capacity — after exponential
+  backoff (``ft.supervisor.backoff_delay``), bounded by ``max_retries``.
+  Co-tenants never see truncated results: an overflowed step's outputs are
+  discarded wholesale (``FrontierPipeline.step(raise_on_overflow=False)``).
+* *Deadline supervision* — per-query tick budgets plus an EWMA wall-clock
+  straggler deadline (``ft.supervisor.StragglerClock`` over completed-query
+  durations): a pathological query degrades to loud cancellation, never a
+  hung engine.  ``run_to_completion`` raises ``TimeoutError`` naming the
+  stuck query ids instead of returning silently.
+* *Fault injection* — a ``ft.failures.QueryFaultPlan`` scripts forced
+  overflows, poisoned source ids (rejected at admission, never expanded),
+  mid-flight cancellations and attributed stalls; tests drive the engine
+  through each and assert surviving queries stay bit-identical to their
+  solo ``FrontierPipeline`` runs.
+
+Determinism note: ``min``-family results are bit-identical to solo runs in
+every reorder mode (min is merge-grouping independent).  ``add``-family
+(PPR) results are bit-identical in ``baseline`` mode (the composite scatter
+accumulates each replica's lanes in the same order as the solo run); under
+``hash`` reorder the merge grouping depends on co-tenant hash-set occupancy,
+so sums may reassociate within fp tolerance — the same caveat as hardware
+fp atomics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps.bfs import BFS_APP, UNVISITED
+from repro.apps.ppr import ppr_app
+from repro.apps.sssp import SSSP_APP
+from repro.core.iru import IRUConfig
+from repro.core.pipeline import (CapacityPolicy, FrontierApp,
+                                 FrontierPipeline)
+from repro.ft.failures import QueryFaultInjector, QueryFaultPlan
+from repro.ft.supervisor import StragglerClock, backoff_delay
+from repro.graphs.csr import CSRGraph, frontier_degree_sum, tile_csr
+
+
+class AdmissionError(RuntimeError):
+    """Query can never be admitted (invalid or over-capacity solo)."""
+
+
+class QueueFullError(AdmissionError):
+    """Bounded wait queue overflow — shed load upstream."""
+
+
+@dataclasses.dataclass(frozen=True)
+class _KindSpec:
+    family: str        # "min" | "add"
+    unit_weight: bool  # min family: traverse with unit edge weights (BFS)
+
+
+KINDS = {
+    "bfs": _KindSpec("min", True),
+    "sssp": _KindSpec("min", False),
+    "ppr": _KindSpec("add", False),
+}
+
+
+@dataclasses.dataclass
+class GraphQuery:
+    """One tenant's traversal query (the graph analogue of ``Request``)."""
+
+    kind: str                 # "bfs" | "sssp" | "ppr"
+    source: int
+    iters: int = 20           # ppr power iterations
+    damping: float = 0.85     # ppr damping
+    tick_budget: Optional[int] = None  # per-query deadline in engine ticks
+    # filled by the engine
+    qid: int = -1
+    status: str = "new"       # queued|running|quarantined|done|rejected|
+    #                           cancelled|failed
+    result: Optional[np.ndarray] = None
+    error: Optional[str] = None
+    slot: int = -1
+    ticks: int = 0            # batched + solo steps consumed
+    retries: int = 0          # quarantine retry attempts
+    admitted_tick: int = -1
+    admitted_time: float = 0.0
+
+    @property
+    def done(self) -> bool:
+        return self.status == "done"
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphServeConfig:
+    """Engine knobs (capacity ladder sized GraphCage-style: buckets are the
+    cache/VMEM-sized working sets the merged frontier is dispatched to)."""
+
+    query_slots: int = 8
+    max_queue: int = 64
+    mode: str = "baseline"               # reorder stage: baseline|sort|hash
+    iru_config: Optional[IRUConfig] = None
+    gather: str = "xla"
+    edge_capacity: Optional[int] = None  # serving edge budget per family
+    #                                      step; None = query_slots * n_edges
+    capacity_policy: CapacityPolicy = CapacityPolicy(
+        n_buckets=4, min_capacity=4096, growth=8)
+    default_tick_budget: int = 10_000
+    max_retries: int = 3
+    backoff_base_s: float = 0.01
+    straggler_factor: float = 10.0
+    straggler_min_s: float = 30.0        # deadline floor (generous default)
+    ewma: float = 0.9
+
+
+# ---------------------------------------------------------------------------
+# composite (multi-query) frontier apps
+# ---------------------------------------------------------------------------
+
+def _min_family_app(Q: int, n: int) -> FrontierApp:
+    """BFS+SSSP composite app over the Q-replica graph: f32 distances with a
+    per-slot unit-weight flag (BFS lanes relax with weight 1.0)."""
+
+    def init(graph: CSRGraph, source: int):
+        dist = jnp.full((Q * n,), jnp.inf, jnp.float32).at[source].set(0.0)
+        mask = jnp.zeros((Q * n,), jnp.bool_).at[source].set(True)
+        return {"dist": dist, "unit": jnp.zeros((Q,), jnp.bool_)}, mask
+
+    def candidate(state, graph: CSRGraph, ef):
+        srcs = jnp.clip(ef.srcs, 0, Q * n - 1)  # padding lanes carry Q*n
+        w = jnp.where(state["unit"][srcs // n], jnp.float32(1.0), ef.weights)
+        return state["dist"][srcs] + w
+
+    def update(state, new_dist, graph: CSRGraph):
+        mask = new_dist < state["dist"]
+        return {"dist": new_dist, "unit": state["unit"]}, mask
+
+    return FrontierApp(
+        name="mq_min", filter_op="min", target="dist",
+        init=init, candidate=candidate, update=update,
+        cond=lambda state, mask: jnp.any(mask),
+        result=lambda state: state["dist"],
+        atomic=True, needs_weights=True)
+
+
+def _add_family_app(Q: int, n: int) -> FrontierApp:
+    """PPR composite app: per-slot personalized teleport/restart, all-nodes
+    frontier on live slots, merged fp-add contribution scatter."""
+
+    def init(graph: CSRGraph, source: int):
+        zeros = jnp.zeros((Q * n,), jnp.float32)
+        state = {"rank": zeros, "src": zeros,
+                 "acc": zeros,
+                 "live": jnp.zeros((Q,), jnp.bool_),
+                 "damp": jnp.zeros((Q,), jnp.float32)}
+        return state, jnp.zeros((Q * n,), jnp.bool_)
+
+    def candidate(state, graph: CSRGraph, ef):
+        deg = jnp.maximum(graph.degrees(), 1).astype(jnp.float32)
+        return (state["rank"] / deg)[ef.srcs]
+
+    def update(state, acc, graph: CSRGraph):
+        live_row = jnp.repeat(state["live"], n)
+        d = jnp.repeat(state["damp"], n)
+        dangling = graph.degrees() == 0
+        leak = jnp.repeat(jnp.sum(
+            jnp.where(dangling, state["rank"], 0.0).reshape(Q, n), axis=1), n)
+        new_rank = ((1 - d) * state["src"] + d * acc
+                    + d * leak * state["src"]).astype(jnp.float32)
+        rank = jnp.where(live_row, new_rank, state["rank"])
+        state = {"rank": rank, "src": state["src"],
+                 "acc": jnp.zeros_like(acc),
+                 "live": state["live"], "damp": state["damp"]}
+        return state, live_row
+
+    return FrontierApp(
+        name="mq_add", filter_op="add", target="acc",
+        init=init, candidate=candidate, update=update,
+        cond=lambda state, mask: jnp.any(mask),
+        result=lambda state: state["rank"],
+        atomic=True)
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+class GraphServingEngine:
+    def __init__(
+        self,
+        graph: CSRGraph,
+        config: Optional[GraphServeConfig] = None,
+        *,
+        fault_plan: Optional[QueryFaultPlan] = None,
+    ):
+        self.graph = graph
+        self.cfg = cfg = config or GraphServeConfig()
+        if cfg.query_slots < 1:
+            raise ValueError(f"query_slots must be >= 1, got {cfg.query_slots}")
+        self.Q, self.n, self.m = cfg.query_slots, graph.n_nodes, graph.n_edges
+        self.cgraph = tile_csr(graph, self.Q)
+        self.injector = (QueryFaultInjector(fault_plan)
+                         if fault_plan is not None else None)
+        self.queue: deque[GraphQuery] = deque()
+        self.slots: list[Optional[GraphQuery]] = [None] * self.Q
+        self.quarantined: list[tuple[GraphQuery, float]] = []  # (q, retry_at)
+        self.completed: list[GraphQuery] = []
+        self.tick_no = 0
+        self.clock = StragglerClock(cfg.straggler_factor, cfg.ewma)
+        self._next_qid = 0
+        self._deg = np.asarray(graph.degrees())
+        # telemetry
+        self.overflow_events = 0
+        self.quarantines = 0
+        self.admission_blocked = 0
+        # family runtimes (composite pipelines share one edge budget each)
+        self._edge_budget = (cfg.edge_capacity if cfg.edge_capacity is not None
+                             else self.Q * self.m)
+        Q, n = self.Q, self.n
+        self._pipes: dict[str, FrontierPipeline] = {}
+        self._states: dict[str, dict] = {}
+        self._masks: dict[str, jax.Array] = {}
+        self._apps = {"min": _min_family_app(Q, n),
+                      "add": _add_family_app(Q, n)}
+        deg_dev = graph.degrees()
+        self._needs_fn = jax.jit(lambda mask: jnp.sum(jnp.where(
+            mask.reshape(Q, n), deg_dev[None, :], 0), axis=1))
+        self._solo_pipes: dict[tuple, FrontierPipeline] = {}
+
+    # -- family runtimes (built lazily: a BFS/SSSP-only workload never
+    #    compiles the add family and vice versa) ---------------------------
+    def _family(self, fam: str) -> FrontierPipeline:
+        if fam not in self._pipes:
+            cfg = self.cfg
+            self._pipes[fam] = FrontierPipeline(
+                self.cgraph, self._apps[fam], mode=cfg.mode,
+                iru_config=cfg.iru_config, gather=cfg.gather,
+                edge_capacity=self._edge_budget,
+                capacity_policy=cfg.capacity_policy)
+            state, mask = self._apps[fam].init(self.cgraph, 0)
+            if fam == "min":  # init seeds composite node 0; engine owns lanes
+                state = {"dist": jnp.full((self.Q * self.n,), jnp.inf,
+                                          jnp.float32),
+                         "unit": state["unit"]}
+                mask = jnp.zeros_like(mask)
+            self._states[fam] = state
+            self._masks[fam] = mask
+        return self._pipes[fam]
+
+    def _family_top_cap(self, fam: str) -> int:
+        return self._family(fam).buckets[-1][0]
+
+    # -- submission / admission -------------------------------------------
+    def _initial_need(self, kind: str, source: int) -> int:
+        if KINDS[kind].family == "add":
+            return self.m  # all-nodes frontier: every replica edge, always
+        return int(frontier_degree_sum(
+            self.graph, jnp.asarray([source], jnp.int32)))
+
+    def submit(self, query: GraphQuery) -> int:
+        """Queue a query; loud rejection when it can never be served."""
+        if query.kind not in KINDS:
+            raise AdmissionError(
+                f"unknown query kind {query.kind!r}; have {sorted(KINDS)}")
+        if not (0 <= query.source < self.n):
+            raise AdmissionError(
+                f"source id {query.source} outside [0, {self.n})")
+        need = self._initial_need(query.kind, query.source)
+        top = self._family_top_cap(KINDS[query.kind].family)
+        if need > top:
+            raise AdmissionError(
+                f"query (kind={query.kind}, source={query.source}) needs "
+                f"{need} edge lanes solo but the top "
+                f"{KINDS[query.kind].family}-family bucket holds {top}: "
+                f"raise edge_capacity")
+        if len(self.queue) >= self.cfg.max_queue:
+            raise QueueFullError(
+                f"wait queue full ({self.cfg.max_queue} queries): shed load")
+        query.qid = self._next_qid
+        self._next_qid += 1
+        query.status = "queued"
+        self.queue.append(query)
+        return query.qid
+
+    def _running(self, fam: Optional[str] = None) -> list[GraphQuery]:
+        return [q for q in self.slots if q is not None
+                and (fam is None or KINDS[q.kind].family == fam)]
+
+    def _family_load(self, fam: str) -> np.ndarray:
+        """Per-slot predicted next-step edge-lane contribution."""
+        if fam == "add":
+            needs = np.zeros(self.Q, np.int64)
+            for q in self._running("add"):
+                needs[q.slot] = self.m
+            return needs
+        if "min" not in self._pipes or not self._running("min"):
+            return np.zeros(self.Q, np.int64)
+        return np.asarray(self._needs_fn(self._masks["min"]), np.int64)
+
+    def _admit(self) -> None:
+        """FIFO admission under the capacity gate (head-of-line order keeps
+        starvation impossible; a blocked head blocks the queue, counted)."""
+        while self.queue:
+            free = [s for s, q in enumerate(self.slots) if q is None]
+            if not free:
+                break
+            query = self.queue[0]
+            src = query.source
+            if self.injector is not None:
+                src = self.injector.admitted_source(query.qid, src)
+            if not (0 <= src < self.n):
+                # poisoned in flight: reject loudly, never expand it
+                self.queue.popleft()
+                query.status = "rejected"
+                query.error = (f"poisoned source id {src} detected at "
+                               f"admission (query {query.qid})")
+                self.completed.append(query)
+                continue
+            fam = KINDS[query.kind].family
+            need = self._initial_need(query.kind, src)
+            load = int(self._family_load(fam).sum())
+            if load + need > self._family_top_cap(fam):
+                self.admission_blocked += 1
+                break  # cannot join yet: wait for tenants to shrink/retire
+            self.queue.popleft()
+            self._place(query, src, free[0])
+
+    def _place(self, query: GraphQuery, src: int, slot: int) -> None:
+        n, fam = self.n, KINDS[query.kind].family
+        self._family(fam)  # ensure runtime exists
+        lo = slot * n
+        if fam == "min":
+            st = self._states["min"]
+            dist = st["dist"].at[lo:lo + n].set(jnp.inf).at[lo + src].set(0.0)
+            unit = st["unit"].at[slot].set(KINDS[query.kind].unit_weight)
+            self._states["min"] = {"dist": dist, "unit": unit}
+            self._masks["min"] = (self._masks["min"]
+                                  .at[lo:lo + n].set(False)
+                                  .at[lo + src].set(True))
+        else:
+            st = self._states["add"]
+            row = jnp.zeros((n,), jnp.float32).at[src].set(1.0)
+            self._states["add"] = {
+                "rank": st["rank"].at[lo:lo + n].set(row),
+                "src": st["src"].at[lo:lo + n].set(row),
+                "acc": st["acc"],
+                "live": st["live"].at[slot].set(True),
+                "damp": st["damp"].at[slot].set(query.damping)}
+            self._masks["add"] = self._masks["add"].at[lo:lo + n].set(True)
+        query.slot = slot
+        query.status = "running"
+        query.ticks = 0
+        query.admitted_tick = self.tick_no
+        query.admitted_time = time.monotonic()
+        self.slots[slot] = query
+
+    def _clear_lane(self, query: GraphQuery) -> None:
+        n, lo, fam = self.n, query.slot * self.n, KINDS[query.kind].family
+        if fam == "min":
+            st = self._states["min"]
+            self._states["min"] = {
+                "dist": st["dist"].at[lo:lo + n].set(jnp.inf),
+                "unit": st["unit"]}
+            self._masks["min"] = self._masks["min"].at[lo:lo + n].set(False)
+        else:
+            st = self._states["add"]
+            zeros = jnp.zeros((n,), jnp.float32)
+            self._states["add"] = {
+                "rank": st["rank"].at[lo:lo + n].set(zeros),
+                "src": st["src"].at[lo:lo + n].set(zeros),
+                "acc": st["acc"],
+                "live": st["live"].at[query.slot].set(False),
+                "damp": st["damp"]}
+            self._masks["add"] = self._masks["add"].at[lo:lo + n].set(False)
+        self.slots[query.slot] = None
+        query.slot = -1
+
+    # -- results -----------------------------------------------------------
+    def _extract(self, query: GraphQuery, state) -> np.ndarray:
+        n, lo = self.n, query.slot * self.n
+        if KINDS[query.kind].family == "add":
+            return np.asarray(state["rank"][lo:lo + n])
+        row = np.asarray(state["dist"][lo:lo + n])
+        if query.kind == "sssp":
+            return row
+        lab = np.full(n, UNVISITED, np.int32)
+        fin = np.isfinite(row)
+        lab[fin] = row[fin].astype(np.int32)
+        return lab
+
+    def _finish(self, query: GraphQuery, result: np.ndarray) -> None:
+        query.result = result
+        query.status = "done"
+        if query.slot >= 0:
+            self._clear_lane(query)
+        self.clock.observe(time.monotonic() - query.admitted_time)
+        self.completed.append(query)
+
+    def _cancel(self, query: GraphQuery, reason: str) -> None:
+        query.status = "cancelled"
+        query.error = reason
+        if query.slot >= 0:
+            self._clear_lane(query)
+        self.completed.append(query)
+
+    # -- overflow quarantine ----------------------------------------------
+    def _quarantine_victim(self, fam: str, needs: np.ndarray) -> GraphQuery:
+        running = self._running(fam)
+        # largest predicted contribution; ties break to the newest tenant
+        # (evicting the latecomer is the least disruptive choice)
+        return max(running,
+                   key=lambda q: (int(needs[q.slot]), q.admitted_tick))
+
+    def _quarantine(self, query: GraphQuery, why: str) -> None:
+        self.quarantines += 1
+        query.retries += 1
+        self._clear_lane(query)
+        if query.retries > self.cfg.max_retries:
+            query.status = "failed"
+            query.error = (f"query {query.qid} exhausted {self.cfg.max_retries}"
+                           f" quarantine retries ({why})")
+            self.completed.append(query)
+            return
+        query.status = "quarantined"
+        query.error = why
+        retry_at = time.monotonic() + backoff_delay(
+            self.cfg.backoff_base_s, query.retries)
+        self.quarantined.append((query, retry_at))
+
+    def _solo_pipe(self, query: GraphQuery) -> FrontierPipeline:
+        key = ((query.kind,) if KINDS[query.kind].family == "min"
+               else (query.kind, query.iters, query.damping))
+        if key not in self._solo_pipes:
+            app = {"bfs": BFS_APP, "sssp": SSSP_APP}.get(query.kind) \
+                or ppr_app(query.iters, query.damping)
+            self._solo_pipes[key] = FrontierPipeline(
+                self.graph, app, mode=self.cfg.mode,
+                iru_config=self.cfg.iru_config, gather=self.cfg.gather,
+                capacity_policy=self.cfg.capacity_policy)
+        return self._solo_pipes[key]
+
+    def _retry_solo(self, query: GraphQuery) -> None:
+        """Quarantined query degrades to a single-tenant run at full
+        base-graph capacity — bit-identical to a solo ``FrontierPipeline``
+        run because it IS one, just host-stepped under the tick budget."""
+        pipe = self._solo_pipe(query)
+        state, mask = pipe.init(query.source)
+        budget = query.tick_budget or self.cfg.default_tick_budget
+        used = 0
+        t0 = time.monotonic()
+        while used < budget - query.ticks and bool(
+                np.asarray(pipe.app.cond(state, mask))):
+            res = pipe.step(state, mask)
+            state, mask = res.state, res.mask
+            used += 1
+        query.ticks += used
+        if bool(np.asarray(pipe.app.cond(state, mask))):
+            self._quarantine_retry_failed(query, budget)
+            return
+        query.result = np.asarray(pipe.app.result(state))
+        query.status = "done"
+        self.clock.observe(time.monotonic() - t0)
+        self.completed.append(query)
+
+    def _quarantine_retry_failed(self, query: GraphQuery, budget: int) -> None:
+        query.retries += 1
+        why = (f"solo retry exceeded the {budget}-tick budget")
+        if query.retries > self.cfg.max_retries:
+            query.status = "failed"
+            query.error = (f"query {query.qid} exhausted "
+                           f"{self.cfg.max_retries} quarantine retries "
+                           f"({why})")
+            self.completed.append(query)
+            return
+        query.status = "quarantined"
+        query.error = why
+        self.quarantined.append((query, time.monotonic() + backoff_delay(
+            self.cfg.backoff_base_s, query.retries)))
+
+    def _drain_quarantine(self) -> None:
+        now = time.monotonic()
+        due = [(q, t) for q, t in self.quarantined if t <= now]
+        self.quarantined = [(q, t) for q, t in self.quarantined if t > now]
+        for q, _ in due:
+            self._retry_solo(q)
+
+    # -- the tick ----------------------------------------------------------
+    def _family_tick(self, fam: str) -> None:
+        pipe = self._family(fam)
+        needs = self._family_load(fam)
+        top = self._family_top_cap(fam)
+        forced = (self.injector is not None
+                  and self.injector.force_overflow(self.tick_no))
+        if forced:
+            self.overflow_events += 1
+            self._quarantine(
+                self._quarantine_victim(fam, needs),
+                f"injected capacity overflow at tick {self.tick_no}")
+            return  # the overflowed step's outputs would have been garbage
+        # pre-dispatch gate: frontiers grow mid-flight; shed the largest
+        # tenants until the merged frontier fits the top bucket again
+        while int(needs.sum()) > top:
+            self.overflow_events += 1
+            victim = self._quarantine_victim(fam, needs)
+            self._quarantine(
+                victim,
+                f"merged frontier degree sum {int(needs.sum())} exceeds the "
+                f"top bucket capacity {top} at tick {self.tick_no}")
+            needs = self._family_load(fam)
+        if not self._running(fam):
+            return
+        res = pipe.step(self._states[fam], self._masks[fam],
+                        raise_on_overflow=False)
+        if bool(res.overflow):
+            # belt-and-braces: the predictor is exact, so this is only
+            # reachable through an adversarial graph mutation — still no
+            # silent truncation, still no co-tenant poisoning
+            self.overflow_events += 1
+            self._quarantine(
+                self._quarantine_victim(fam, needs),
+                f"step overflow at tick {self.tick_no}")
+            return
+        self._states[fam], self._masks[fam] = res.state, res.mask
+        for q in self._running(fam):
+            q.ticks += 1
+        self._retire(fam)
+
+    def _retire(self, fam: str) -> None:
+        state = self._states[fam]
+        if fam == "min":
+            alive = np.asarray(
+                self._masks["min"].reshape(self.Q, self.n).any(axis=1))
+            for q in self._running("min"):
+                if not alive[q.slot]:
+                    self._finish(q, self._extract(q, state))
+        else:
+            for q in self._running("add"):
+                if q.ticks >= q.iters:
+                    self._finish(q, self._extract(q, state))
+
+    def _supervise(self) -> None:
+        now = time.monotonic()
+        deadline = self.clock.deadline(self.cfg.straggler_min_s)
+        for q in self._running():
+            if self.injector is not None:
+                self.injector.stall(q.qid, self.tick_no)
+                if self.injector.should_cancel(q.qid, self.tick_no):
+                    self._cancel(q, f"cancelled mid-flight at tick "
+                                    f"{self.tick_no}")
+                    continue
+            budget = q.tick_budget or self.cfg.default_tick_budget
+            if q.ticks >= budget:
+                self._cancel(q, f"tick budget {budget} exhausted")
+                continue
+            age = time.monotonic() - q.admitted_time
+            if deadline is not None and age > deadline:
+                self._cancel(
+                    q, f"straggler deadline exceeded ({age:.3f}s > "
+                       f"{deadline:.3f}s EWMA wall-clock bound)")
+
+    def tick(self) -> int:
+        """One engine tick: drain quarantine, admit, one batched step per
+        active family, supervise deadlines.  Returns in-flight count."""
+        self.tick_no += 1
+        self._drain_quarantine()
+        self._admit()
+        for fam in ("min", "add"):
+            if self._running(fam):
+                self._family_tick(fam)
+        self._supervise()
+        return (sum(q is not None for q in self.slots) + len(self.queue)
+                + len(self.quarantined))
+
+    def run_to_completion(self, max_ticks: int = 10_000) -> list[GraphQuery]:
+        """Drive until every query resolves; loud on a stuck engine (the
+        same contract as ``ServingEngine.run_to_completion``)."""
+        for _ in range(max_ticks):
+            if self.tick() == 0:
+                return self.completed
+        stuck = sorted(
+            [q.qid for q in self.slots if q is not None]
+            + [q.qid for q in self.queue]
+            + [q.qid for q, _ in self.quarantined])
+        raise TimeoutError(
+            f"graph engine exhausted max_ticks={max_ticks} with queries "
+            f"still in flight: qids={stuck}")
+
+    # -- convenience -------------------------------------------------------
+    def solo_reference(self, query: GraphQuery) -> np.ndarray:
+        """The solo ``FrontierPipeline`` result this query's engine result
+        must match (the parity oracle the fault tests compare against)."""
+        return np.asarray(self._solo_pipe(query).run(query.source))

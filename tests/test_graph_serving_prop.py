@@ -1,0 +1,89 @@
+"""Property-based tests (hypothesis) for multi-tenant graph serving.
+
+Two invariants the composite replica design must hold for ANY query mix:
+
+* per-query isolation — duplicate filtering / merging in the shared step
+  combines frontier lanes only WITHIN a query, never across tenants (the
+  composite id space makes cross-tenant ids collision-free by
+  construction);
+* solo parity — every query's served result equals its solo
+  ``FrontierPipeline`` run, for random mixes of kinds/sources on both a
+  hub-skewed (kron) and a high-diameter planar (delaunay) graph.
+
+Runs where hypothesis is installed (CI installs it; the fixed-seed twin in
+test_graph_serving.py covers environments without it).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="hypothesis not installed in this environment")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pipeline import CapacityPolicy
+from repro.graphs.csr import frontier_degree_sum, tile_csr
+from repro.graphs.generators import delaunay, kron
+from repro.serve import GraphQuery, GraphServeConfig, GraphServingEngine
+
+GK = kron(scale=6, edge_factor=8, seed=4)
+GD = delaunay(scale=32, seed=2)
+SMALL = CapacityPolicy(n_buckets=2, min_capacity=256, growth=16)
+
+query_strategy = st.tuples(
+    st.sampled_from(["bfs", "sssp", "ppr"]),
+    st.integers(min_value=0, max_value=min(GK.n_nodes, GD.n_nodes) - 1),
+    st.integers(min_value=2, max_value=6))  # ppr iters
+
+
+@settings(max_examples=8, deadline=None)
+@given(qs=st.lists(query_strategy, min_size=1, max_size=6),
+       graph_name=st.sampled_from(["kron", "delaunay"]))
+def test_random_query_mix_matches_solo_runs(qs, graph_name):
+    g = GK if graph_name == "kron" else GD
+    eng = GraphServingEngine(g, GraphServeConfig(query_slots=3,
+                                                 capacity_policy=SMALL))
+    queries = [GraphQuery(kind, src, iters=iters) for kind, src, iters in qs]
+    for q in queries:
+        eng.submit(q)
+    eng.run_to_completion(5_000)
+    for q in queries:
+        assert q.done, (q.qid, q.status, q.error)
+        np.testing.assert_array_equal(
+            np.asarray(q.result), eng.solo_reference(q),
+            err_msg=f"{q.kind} from {q.source} diverged in the mix {qs}")
+
+
+@settings(max_examples=10, deadline=None)
+@given(sources=st.lists(st.integers(0, GK.n_nodes - 1),
+                        min_size=2, max_size=4))
+def test_merged_frontiers_dedupe_per_query_never_across(sources):
+    """Tenants traversing from the SAME sources stay independent: if the
+    shared step deduped across queries, later replicas' frontiers would be
+    merged away and their labels would diverge from the solo run."""
+    eng = GraphServingEngine(GK, GraphServeConfig(query_slots=len(sources),
+                                                  capacity_policy=SMALL))
+    queries = [GraphQuery("bfs", s) for s in sources]
+    for q in queries:
+        eng.submit(q)
+    eng.run_to_completion(2_000)
+    for q in queries:
+        assert q.done, (q.qid, q.status, q.error)
+        np.testing.assert_array_equal(np.asarray(q.result),
+                                      eng.solo_reference(q))
+
+
+@settings(max_examples=10, deadline=None)
+@given(bits=st.lists(st.booleans(), min_size=GK.n_nodes * 2,
+                     max_size=GK.n_nodes * 2))
+def test_composite_degree_sum_is_sum_of_per_query_sums(bits):
+    """The admission-control estimate is exact: the merged frontier's
+    degree sum over the replica graph equals the sum of each query's solo
+    degree sum (replicas are disjoint, so nothing cancels or merges)."""
+    Q, n = 2, GK.n_nodes
+    cg = tile_csr(GK, Q)
+    mask = np.asarray(bits, bool)
+    import jax.numpy as jnp
+    total = int(frontier_degree_sum(cg, jnp.asarray(mask)))
+    per_q = [int(frontier_degree_sum(GK, jnp.asarray(mask[q * n:(q + 1) * n])))
+             for q in range(Q)]
+    assert total == sum(per_q)

@@ -70,3 +70,17 @@ def test_eos_frees_slot_early(params):
     eng.submit(r3)
     eng.run_to_completion()
     assert r3.done and len(r3.generated) == 2
+
+
+def test_run_to_completion_timeout_names_stuck_requests(params):
+    """An exhausted tick budget must raise naming the abandoned request
+    ids, never return silently with requests still in flight (the old
+    behaviour: a quiet return indistinguishable from a drained queue)."""
+    eng = ServingEngine(CFG, PCFG, params, ServeConfig(batch_slots=2, max_seq=64))
+    ra = Request(prompt=np.array([1, 2]), max_new_tokens=50)
+    rb = Request(prompt=np.array([3, 4]), max_new_tokens=50)
+    eng.submit(ra)
+    eng.submit(rb)
+    with pytest.raises(TimeoutError, match=r"rids=\[0, 1\]"):
+        eng.run_to_completion(max_ticks=3)
+    assert not ra.done and not rb.done
