@@ -5,7 +5,8 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-ci test-fast bench bench-quick bench-iru bench-iru-quick \
-	bench-apps-quick bench-serving smoke-pipeline smoke-graph-serving
+	bench-apps-quick bench-serving bench-ragged smoke-pipeline \
+	smoke-graph-serving
 
 test:
 	$(PY) -m pytest -x -q
@@ -55,3 +56,9 @@ smoke-graph-serving:
 # refresh only the multi-tenant serving rows of BENCH_iru.json
 bench-serving:
 	$(PY) -m benchmarks.iru_throughput --serving-only
+
+# refresh only the padded-vs-ragged rows of BENCH_iru.json (engine
+# occupancy sweep + delaunay BFS app twins); ./bench.sh wraps this with
+# the pinned env hygiene
+bench-ragged:
+	$(PY) -m benchmarks.iru_throughput --ragged-only

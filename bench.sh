@@ -1,0 +1,37 @@
+#!/usr/bin/env bash
+# Bench entry point with pinned environment hygiene, so BENCH_iru.json
+# refreshes are comparable across boxes and across sessions.
+#
+#   ./bench.sh                  # full sweep  (make bench-iru)
+#   ./bench.sh ragged           # padded-vs-ragged rows only (make bench-ragged)
+#   ./bench.sh serving          # serving rows only          (make bench-serving)
+#   ./bench.sh quick            # CI-sized smoke, no JSON write
+#
+# The hygiene (after HomebrewNLP-Jax / olmax run.sh):
+#  * tcmalloc, preloaded when present — page-faulting glibc malloc skews the
+#    large-buffer rows; the threshold silences its large-alloc warnings
+#  * one XLA host device — the engines are single-device; autodetected
+#    multi-device CPU clients shard the compile cache and add RPC noise
+#  * 32-bit default dtypes, x64 off — the numbers must measure the int32
+#    index streams the engines are specified on, never a silent fp64 upcast
+set -euo pipefail
+cd "$(dirname "$0")"
+
+TCMALLOC=/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4
+if [[ -r "$TCMALLOC" ]]; then
+    export LD_PRELOAD="$TCMALLOC"
+    export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD=60000000000
+fi
+export TF_CPP_MIN_LOG_LEVEL=4
+export XLA_FLAGS="--xla_force_host_platform_device_count=1${XLA_FLAGS:+ $XLA_FLAGS}"
+export JAX_ENABLE_X64=0
+export JAX_DEFAULT_DTYPE_BITS=32
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+case "${1:-full}" in
+    full)    exec python -m benchmarks.iru_throughput ;;
+    ragged)  exec python -m benchmarks.iru_throughput --ragged-only ;;
+    serving) exec python -m benchmarks.iru_throughput --serving-only ;;
+    quick)   exec python -m benchmarks.iru_throughput --quick ;;
+    *)       echo "usage: $0 [full|ragged|serving|quick]" >&2; exit 2 ;;
+esac

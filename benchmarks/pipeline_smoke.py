@@ -4,10 +4,11 @@ whole run that forces a bucket hop.
 
 Exercises the full device-resident step — expand (Pallas block-reuse
 gather) → banked hash reorder → min-merge → scatter update — at a size CI
-can afford, the whole-run while_loop driver for parity, and the bucketed
+can afford, the whole-run while_loop driver for parity, the bucketed
 dispatch path (small-bucket levels, a host-side hop to a larger bucket,
 ``n_traces <= n_buckets``) so capacity bucketing is exercised in CI, not
-just in tests.
+just in tests, and the ragged (live-prefix) path on a sparse delaunay
+frontier forcing < 10% bucket occupancy.
 
     PYTHONPATH=src python -m benchmarks.pipeline_smoke
 """
@@ -68,12 +69,35 @@ def main() -> None:
     np.testing.assert_array_equal(np.asarray(bucketed.run(0)), bfs(g, 0))
     assert bucketed.n_traces <= len(bucketed.buckets)  # executables reused
 
+    # ragged path: a sparse delaunay frontier filling < 10% of its bucket —
+    # live-prefix execution must stay bit-identical to both the padded
+    # bucketed run and the host oracle, without any extra compile
+    gd = make_dataset("delaunay", scale=24)
+    source_d = int(np.argmax(np.asarray(gd.degrees())))
+    # one big bucket (>= 10x the max frontier degree sum of a planar
+    # graph's BFS levels) forces low occupancy on EVERY level
+    sparse_policy = CapacityPolicy(n_buckets=1,
+                                   min_capacity=max(gd.n_edges, 1), growth=8)
+    rag = FrontierPipeline(gd, BFS_APP, mode="hash", iru_config=cfg,
+                           capacity_policy=sparse_policy, ragged=True)
+    pad = FrontierPipeline(gd, BFS_APP, mode="hash", iru_config=cfg,
+                           capacity_policy=sparse_policy, ragged=False)
+    deg = np.asarray(gd.degrees())
+    occ = float(deg[source_d]) / rag.buckets[-1][0]
+    assert occ < 0.1, (occ, rag.buckets)
+    got = np.asarray(rag.run(source_d))
+    np.testing.assert_array_equal(got, np.asarray(pad.run(source_d)))
+    np.testing.assert_array_equal(got, bfs(gd, source_d))
+    assert rag.n_traces <= len(rag.buckets), (rag.n_traces, rag.buckets)
+
     print(f"pipeline smoke ok: kron scale 7 ({g.n_nodes} nodes, "
           f"{g.n_edges} edges), first step expanded {int(n_edges)} edges "
           f"through the interpret-mode Pallas gather; whole run matches "
           f"the host oracle in 1 compile; bucketed run (ladder "
           f"{[b[0] for b in bucketed.buckets]}) hopped buckets and matched "
-          f"in {bucketed.n_traces} compiles")
+          f"in {bucketed.n_traces} compiles; ragged delaunay run at "
+          f"{occ:.1%} source-level bucket occupancy matched padded + host "
+          f"in {rag.n_traces} compiles")
 
 
 if __name__ == "__main__":

@@ -19,11 +19,21 @@ import jax.numpy as jnp
 
 FilterOp = Literal["add", "min", "max"]
 
-_INIT = {
-    "add": 0.0,
-    "min": float("inf"),
-    "max": float("-inf"),
-}
+def _merge_init(op: str, dtype) -> jax.Array:
+    """Neutral element of a merge op at a payload dtype (inert lanes).
+
+    Integer payloads (BFS depths, edge counts) take the dtype extremum —
+    ``float('inf')`` does not convert — and ``iinfo.min``/``max`` are exact
+    for signed and unsigned dtypes alike.
+    """
+    if op == "add":
+        return jnp.zeros((), dtype)
+    if op not in ("min", "max"):
+        raise ValueError(f"unknown filter op {op!r}")
+    if jnp.issubdtype(dtype, jnp.integer):
+        info = jnp.iinfo(dtype)
+        return jnp.array(info.max if op == "min" else info.min, dtype)
+    return jnp.array(jnp.inf if op == "min" else -jnp.inf, dtype)
 
 
 def run_starts(sorted_indices: jax.Array, active: jax.Array | None = None) -> jax.Array:
@@ -61,7 +71,7 @@ def merge_sorted(
     if active is not None:
         # lane mask broadcasts across trailing payload dims ([n] or [n, k])
         lane = active.reshape(active.shape + (1,) * (values.ndim - 1))
-        vals = jnp.where(lane, values, jnp.asarray(_INIT[op], values.dtype))
+        vals = jnp.where(lane, values, _merge_init(op, values.dtype))
     if op == "add":
         merged = jax.ops.segment_sum(vals, segs, num_segments=n)
     elif op == "min":

@@ -160,8 +160,19 @@ def iru_reorder(
     secondary: jax.Array | None = None,
     *,
     config: IRUConfig = IRUConfig(),
+    n_live: jax.Array | None = None,
 ) -> IRUStream:
-    """Reorder (and optionally merge) an irregular-access index stream."""
+    """Reorder (and optionally merge) an irregular-access index stream.
+
+    ``n_live`` (a runtime operand, never a shape — passing it does not
+    retrace) makes the stream ragged: only the first ``n_live`` lanes are
+    real, the rest are dead padding.  The engines then run every sort, scan
+    and round loop against the live prefix only and emit dead lanes as
+    inactive filler carrying their original values — see
+    ``hash_reorder_batched`` for the exact layout contract.  ``hash_ref``
+    composes the same contract on the host (``n_live`` must be concrete
+    there).
+    """
     indices = jnp.asarray(indices).astype(jnp.int32)
     n = indices.shape[0]
     if secondary is None:
@@ -177,13 +188,14 @@ def iru_reorder(
 
     if config.mode == "hash_ref":
         oi, osec, opos, oact = _hash_ref_host(
-            np.asarray(indices), np.asarray(secondary), config)
+            np.asarray(indices), np.asarray(secondary), config,
+            n_live=None if n_live is None else int(n_live))
         stream = IRUStream(jnp.asarray(oi), jnp.asarray(osec),
                            jnp.asarray(opos), jnp.asarray(oact))
     elif config.window_elems is not None and n > config.window_elems:
-        stream = _windowed_reorder(indices, secondary, config)
+        stream = _windowed_reorder(indices, secondary, config, n_live)
     else:
-        stream = _reorder_window(indices, secondary, config)
+        stream = _reorder_window(indices, secondary, config, n_live)
 
     # explicit dtype postconditions through every engine (window bookkeeping
     # must stay int32; payloads — including 2-D — must keep their dtype)
@@ -193,11 +205,12 @@ def iru_reorder(
 
 
 def _reorder_window(
-    indices: jax.Array, secondary: jax.Array, config: IRUConfig
+    indices: jax.Array, secondary: jax.Array, config: IRUConfig,
+    n_live: jax.Array | None = None,
 ) -> IRUStream:
     """One window (or the whole stream) through the configured jnp engine."""
     if config.mode == "sort":
-        stream = _sort_reorder(indices, secondary, config)
+        stream = _sort_reorder(indices, secondary, config, n_live)
     elif config.mode == "hash":
         from repro.kernels.iru_reorder import ops as hash_ops  # local: avoid cycle
 
@@ -214,10 +227,15 @@ def _reorder_window(
             n_partitions=config.n_partitions,
             round_cap=config.round_cap,
             bank_map=config.bank_map,
+            n_live=n_live,
         )
     else:
         raise ValueError(f"unknown IRU mode {config.mode!r}")
-    if config.compact and config.filter_op is not None:
+    # hash engines already emit survivors at the front and deactivated lanes
+    # at the tail (same argument as the _hash_ref_host comment) — compact
+    # would be a stable sort that moves nothing, so only the sort engine,
+    # whose survivors stay interleaved in index order, pays for it
+    if config.compact and config.filter_op is not None and config.mode != "hash":
         act, idx, sec, pos = filt.compact(
             stream.active, stream.indices, stream.secondary, stream.positions
         )
@@ -227,7 +245,8 @@ def _reorder_window(
 
 @functools.partial(jax.jit, static_argnames=("config",))
 def _windowed_reorder(
-    indices: jax.Array, secondary: jax.Array, config: IRUConfig
+    indices: jax.Array, secondary: jax.Array, config: IRUConfig,
+    n_live: jax.Array | None = None,
 ) -> IRUStream:
     """Bounded-lookahead streaming: independent windows, concatenated.
 
@@ -237,6 +256,14 @@ def _windowed_reorder(
     call of the same body at the tail shape.  The whole pipeline is jitted
     (``config`` is a frozen dataclass, hence a static cache key), so a given
     stream shape compiles exactly once.
+
+    A ragged stream clips its live count per window (live lanes are a global
+    prefix, so window ``i`` holds ``clip(n_live - i*w, 0, w)`` of them):
+    fully dead windows skip the engine outright (``lax.cond``) — the m=0
+    ragged contract is the identity layout (original values, stream-order
+    positions, all lanes inactive), so a whole-buffer passthrough IS the
+    engine's answer, and per-stream engine cost scales with the number of
+    *live* windows rather than the padded window count.
     """
     w = config.window_elems
     n = indices.shape[0]
@@ -245,13 +272,28 @@ def _windowed_reorder(
     payload = secondary.shape[1:]
     parts: list[tuple[jax.Array, jax.Array, jax.Array, jax.Array]] = []
 
+    def ragged_window(idx_w, sec_w, live_w):
+        wlen = idx_w.shape[0]
+        return jax.lax.cond(
+            live_w > 0,
+            lambda _: (lambda s: (s.indices, s.secondary, s.positions,
+                                  s.active))(
+                _reorder_window(idx_w, sec_w, sub, live_w)),
+            lambda _: (idx_w, sec_w, jnp.arange(wlen, dtype=jnp.int32),
+                       jnp.zeros((wlen,), jnp.bool_)),
+            None)
+
     if k:
         offsets = jnp.arange(k, dtype=jnp.int32) * jnp.int32(w)
 
         def body(xs):
             idx_w, sec_w, off = xs
-            s = _reorder_window(idx_w, sec_w, sub)
-            return s.indices, s.secondary, s.positions + off, s.active
+            if n_live is None:
+                s = _reorder_window(idx_w, sec_w, sub, None)
+                return s.indices, s.secondary, s.positions + off, s.active
+            live_w = jnp.clip(jnp.asarray(n_live, jnp.int32) - off, 0, w)
+            oi, osec, opos, oact = ragged_window(idx_w, sec_w, live_w)
+            return oi, osec, opos + off, oact
 
         oi, osec, opos, oact = jax.lax.map(
             body,
@@ -262,9 +304,15 @@ def _windowed_reorder(
         parts.append((oi.reshape(-1), osec.reshape((-1,) + payload),
                       opos.reshape(-1), oact.reshape(-1)))
     if n_full < n:
-        s = _reorder_window(indices[n_full:], secondary[n_full:], sub)
-        parts.append((s.indices, s.secondary,
-                      s.positions + jnp.int32(n_full), s.active))
+        if n_live is None:
+            s = _reorder_window(indices[n_full:], secondary[n_full:], sub,
+                                None)
+            tail = (s.indices, s.secondary, s.positions, s.active)
+        else:
+            live_t = jnp.clip(jnp.asarray(n_live, jnp.int32)
+                              - jnp.int32(n_full), 0, n - n_full)
+            tail = ragged_window(indices[n_full:], secondary[n_full:], live_t)
+        parts.append((tail[0], tail[1], tail[2] + jnp.int32(n_full), tail[3]))
     if len(parts) == 1:
         return IRUStream(*parts[0])
     return IRUStream(*(jnp.concatenate([p[i] for p in parts], axis=0)
@@ -272,7 +320,8 @@ def _windowed_reorder(
 
 
 def _hash_ref_host(
-    indices: np.ndarray, secondary: np.ndarray, config: IRUConfig
+    indices: np.ndarray, secondary: np.ndarray, config: IRUConfig,
+    n_live: int | None = None,
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """numpy oracle of the hash engine — identical semantics, no tracing.
 
@@ -280,10 +329,12 @@ def _hash_ref_host(
     vectorized ``hash_reorder_ref_vec`` fast path per window, so big frontiers
     stop paying O(n) Python.  With ``n_partitions > 1`` or a ``round_cap``
     each window routes through the partitioned/cap-aware oracle instead,
-    mirroring the banked engine decision for decision.
+    mirroring the banked engine decision for decision.  ``n_live`` composes
+    the ragged-prefix contract per window (``ref.ragged_oracle``), exactly
+    like the JAX engines under ``_windowed_reorder``.
     """
     from repro.kernels.iru_reorder.ref import (
-        hash_reorder_ref_banked, hash_reorder_ref_vec)
+        hash_reorder_ref_banked, hash_reorder_ref_vec, ragged_oracle)
 
     n = indices.shape[0]
     if n == 0:
@@ -295,18 +346,24 @@ def _hash_ref_host(
     outs = []
     for s0 in range(0, n, w):
         if banked:
-            oi, osec, opos, oact = hash_reorder_ref_banked(
-                indices[s0 : s0 + w], secondary[s0 : s0 + w],
+            fn = functools.partial(
+                hash_reorder_ref_banked,
                 num_sets=config.num_sets, slots=config.slots,
                 elem_bytes=config.target_elem_bytes,
                 block_bytes=config.block_bytes, filter_op=config.filter_op,
                 n_partitions=config.n_partitions, round_cap=config.round_cap)
         else:
-            oi, osec, opos, oact = hash_reorder_ref_vec(
-                indices[s0 : s0 + w], secondary[s0 : s0 + w],
+            fn = functools.partial(
+                hash_reorder_ref_vec,
                 num_sets=config.num_sets, slots=config.slots,
                 elem_bytes=config.target_elem_bytes,
                 block_bytes=config.block_bytes, filter_op=config.filter_op)
+        idx_w, sec_w = indices[s0 : s0 + w], secondary[s0 : s0 + w]
+        if n_live is None:
+            oi, osec, opos, oact = fn(idx_w, sec_w)
+        else:
+            live_w = int(np.clip(n_live - s0, 0, idx_w.shape[0]))
+            oi, osec, opos, oact = ragged_oracle(fn, idx_w, sec_w, live_w)
         opos = (opos + np.int32(s0)).astype(np.int32)
         # no compaction pass needed: the oracle already emits survivors at the
         # front and filtered lanes at the tail (compact would be the identity)
@@ -345,18 +402,32 @@ def reorder_frontier(
             np.asarray(stream.positions), np.asarray(stream.active))
 
 
-def _sort_reorder(indices: jax.Array, secondary: jax.Array, cfg: IRUConfig) -> IRUStream:
+def _sort_reorder(indices: jax.Array, secondary: jax.Array, cfg: IRUConfig,
+                  n_live: jax.Array | None = None) -> IRUStream:
     # Stable sort on the index value: groups equal memory blocks AND makes
     # duplicate indices adjacent for the merge stage.  (block id is monotone
     # in the index, so sorting by index implies sorting by block.)
-    order = jnp.argsort(indices, stable=True)
+    # Ragged streams sort dead lanes to the tail on a sentinel key (live
+    # indices are node ids, always < INT32_MAX) where they stay inactive,
+    # keep their original values and never join a duplicate run.
+    n = indices.shape[0]
+    if n_live is None:
+        live = None
+        skey = indices
+    else:
+        live = jnp.arange(n, dtype=jnp.int32) < jnp.clip(
+            jnp.asarray(n_live, jnp.int32), 0, n)
+        skey = jnp.where(live, indices, jnp.int32(np.iinfo(np.int32).max))
+    order = jnp.argsort(skey, stable=True)
     idx = indices[order]
     sec = jnp.take(secondary, order, axis=0)
     pos = order.astype(jnp.int32)
+    live_s = None if live is None else live[order]
     if cfg.filter_op is None:
-        active = jnp.ones((indices.shape[0],), jnp.bool_)
+        active = (jnp.ones((n,), jnp.bool_) if live_s is None else live_s)
         return IRUStream(idx, sec, pos, active)
-    merged, survivors = filt.merge_sorted(idx, sec, cfg.filter_op)
+    merged, survivors = filt.merge_sorted(idx, sec, cfg.filter_op,
+                                          active=live_s)
     return IRUStream(idx, merged, pos, survivors)
 
 

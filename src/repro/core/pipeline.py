@@ -238,6 +238,21 @@ class FrontierPipeline:
     ``capacity_policy`` buckets the compiled capacities (see
     ``CapacityPolicy``); the default single bucket at ``edge_capacity``
     reproduces the fixed-capacity pipeline exactly.
+
+    ``ragged`` (default True) threads the expansion's live lane count
+    (``EdgeFrontier.n_valid``) into the reorder engines as ``n_live``, so
+    sorts, segment scans and occupancy rounds run against the live prefix
+    of the padded bucket instead of its full extent — the padded-size
+    residue the capacity ladder cannot remove (a bucket is still 1-growthx
+    oversized on average, and the top bucket dwarfs sparse frontiers).
+    Results are unchanged: the ragged stream is bit-identical on indices /
+    positions / active to the padded one (engine parity suites +
+    ``tests/test_iru_ragged.py``), with payload fp grouping differing only
+    within the documented reduction-order freedom.  The live count is a
+    runtime operand, never a shape — bucket executables and trace counts
+    are identical to padded execution.  ``ragged=False`` restores padded
+    execution exactly (the benchmark's padded-vs-ragged rows pin the
+    difference).
     """
 
     def __init__(
@@ -251,6 +266,7 @@ class FrontierPipeline:
         edge_capacity: Optional[int] = None,
         capacity_policy: Optional[CapacityPolicy] = None,
         gather: str = "xla",
+        ragged: bool = True,
     ):
         if mode not in ("baseline", "sort", "hash"):
             raise ValueError(
@@ -268,14 +284,24 @@ class FrontierPipeline:
         else:
             self.iru_config = dataclasses.replace(
                 iru_config or IRUConfig(), mode=mode, filter_op=app.filter_op)
+        self.ragged = ragged
         self.capacity_policy = capacity_policy or CapacityPolicy()
         # ascending (edge_cap, node_cap) rungs; top rung == full capacity
         self.buckets = self.capacity_policy.ladder(
             self.edge_capacity, graph.n_nodes)
         self.n_traces = 0  # whole-run compiles (tests assert <= n_buckets)
         self.n_hops = 0    # host bucket dispatches across run() calls
+        # whole-run executables donate (state, mask, it): the while_loop
+        # carry rewrites every buffer each level anyway, so the caller's
+        # copies are dead the moment the call is dispatched — donation lets
+        # XLA reuse them instead of allocating a fresh frontier/state set
+        # per run/hop.  run() rebinds all three from the outputs before any
+        # further use.  The per-step executables (_step_b) must NOT donate:
+        # step(raise_on_overflow=False) hands the UNCHANGED inputs back on
+        # overflow and the serving engine re-dispatches them rung by rung.
         self._run_b = tuple(
-            jax.jit(functools.partial(self._run_impl, bucket=b))
+            jax.jit(functools.partial(self._run_impl, bucket=b),
+                    donate_argnums=(1, 2, 3))
             for b in range(len(self.buckets)))
         self._step_b = tuple(
             jax.jit(functools.partial(self._step_impl, bucket=b))
@@ -312,15 +338,21 @@ class FrontierPipeline:
         vals = app.candidate(state, g, ef)
         ident = _merge_identity(app.filter_op, vals.dtype)
         vals = jnp.where(ef.valid, vals, ident)
-        n_edges = jnp.sum(ef.valid.astype(jnp.int32))
+        # the expansion already counted its live lanes (clamped to the
+        # bucket) — no O(capacity) reduction to recover it
+        n_edges = ef.n_valid
         if self.iru_config is None:
             idx, svals, act = ef.dsts, vals, ef.valid
             real = ef.valid
         else:
             # padding lanes carry the sentinel index n: they ride through
             # the reorder as ordinary elements (merging only with each
-            # other) and drop at the scatter — stream shape stays static
-            stream = iru_reorder(ef.dsts, vals, config=self.iru_config)
+            # other) and drop at the scatter — stream shape stays static.
+            # Under ragged execution the engines instead treat them as dead
+            # lanes: sorts/scans/rounds see the live prefix only, and the
+            # pads come back inactive without ever entering a hash set.
+            stream = iru_reorder(ef.dsts, vals, config=self.iru_config,
+                                 n_live=ef.n_valid if self.ragged else None)
             idx, svals = stream.indices, stream.secondary
             act = stream.active & (stream.indices < n)
             # expansion emits valid lanes front-packed, so a lane is a real
@@ -396,6 +428,21 @@ class FrontierPipeline:
         way ``n_traces <= n_buckets``.
         """
         state, mask = self.init(source)
+        # the run executables donate (state, mask, it); donation rejects one
+        # buffer arriving as two leaves (XLA: "donate the same buffer
+        # twice"), and apps may seed several state entries from one array
+        # (ppr's rank/src) — or, worse, reference a graph array, which must
+        # never be given away.  Copy-break duplicates once per run — later
+        # hops pass executable outputs, which are distinct buffers.
+        seen: set[int] = {id(x) for x in jax.tree_util.tree_leaves(self.graph)}
+
+        def _unalias(x):
+            if id(x) in seen:
+                return jnp.array(x, copy=True)
+            seen.add(id(x))
+            return x
+
+        state, mask = jax.tree_util.tree_map(_unalias, (state, mask))
         it = jnp.int32(0)
         shrunk = self.edge_capacity < self.graph.n_edges
         if len(self.buckets) == 1 and not shrunk:

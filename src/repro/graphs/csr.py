@@ -69,6 +69,13 @@ class EdgeFrontier(NamedTuple):
     #                    sum exceeded edge_capacity, so edges were DROPPED —
     #                    the consumer must re-dispatch at a larger capacity
     #                    (what core.pipeline's bucketed dispatch does)
+    n_valid: jax.Array | None = None  # int32 scalar: live lane count — the
+    #                    real edges occupy lanes [0, n_valid).  CLAMPED to
+    #                    the capacity: on overflow it reports the lanes that
+    #                    actually exist, never the degree sum that did not
+    #                    fit (the ragged engines trust it as a prefix bound).
+    #                    Always sum(valid); carried so consumers never pay an
+    #                    O(capacity) reduction to recover it.
 
 
 def frontier_from_mask(mask: jax.Array, *, size: int | None = None) -> jax.Array:
@@ -179,7 +186,8 @@ def expand_frontier(
             valid=jnp.zeros((cap,), jnp.bool_),
             weights=jnp.zeros((cap,), graph.weights.dtype) if with_weights
             else None,
-            overflow=jnp.sum(counts).astype(jnp.int32) > cap)
+            overflow=jnp.sum(counts).astype(jnp.int32) > cap,
+            n_valid=jnp.int32(0))
 
     cum = jnp.cumsum(counts)
     total = cum[F - 1]
@@ -212,7 +220,12 @@ def expand_frontier(
     else:
         raise ValueError(f"unknown gather backend {gather!r}")
     dsts = jnp.where(valid, dsts, n).astype(jnp.int32)
-    return EdgeFrontier(srcs, dsts, eids, valid, weights, total > cap)
+    # n_valid clamps to the capacity: a truncated expansion (overflow, or a
+    # caller-shrunk frontier_from_mask(size=) that compacted lanes away) must
+    # never advertise more live lanes than the buffer holds — the ragged
+    # engines treat n_valid as a trusted prefix bound
+    return EdgeFrontier(srcs, dsts, eids, valid, weights, total > cap,
+                        jnp.minimum(total, jnp.int32(cap)))
 
 
 def tile_csr(graph: CSRGraph, copies: int) -> CSRGraph:

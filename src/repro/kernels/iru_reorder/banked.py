@@ -44,6 +44,9 @@ from jax.sharding import PartitionSpec as P
 from repro.kernels.iru_reorder.batched import (
     _assemble,
     _reorder_presorted,
+    _two_gen_emit,
+    _two_gen_fits,
+    _two_gen_plan,
     hash_reorder_batched,
 )
 from repro.kernels.iru_reorder.iru_reorder import _hash_set
@@ -85,8 +88,16 @@ def hash_reorder_banked(
     round_cap: Optional[int] = None,
     mesh=None,
     bank_map: str = "map",
+    n_live: Optional[jax.Array] = None,
 ):
     """Banked hash reorder; stream-identical to ``ref.hash_reorder_ref_banked``.
+
+    ``n_live`` (runtime operand) makes the stream ragged: the result is the
+    banked oracle applied to the live prefix — partition fronts, then the
+    dead lanes in stream order (``active=False``, original values), then the
+    partition tails.  Dead lanes take a sentinel partition so the bank
+    counts, the capacity-bypass decision (``partition_capacity`` evaluated
+    on the *live* count) and every per-row round bound see only the prefix.
 
     Returns ``(out_idx, out_sec, out_pos, out_act)`` arrays.
     """
@@ -100,7 +111,7 @@ def hash_reorder_banked(
         return hash_reorder_batched(
             indices, secondary, num_sets=num_sets, slots=slots,
             elem_bytes=elem_bytes, block_bytes=block_bytes,
-            filter_op=filter_op, round_cap=round_cap)
+            filter_op=filter_op, round_cap=round_cap, n_live=n_live)
     if num_sets % n_partitions != 0:
         raise ValueError(
             f"num_sets={num_sets} must divide evenly into "
@@ -115,9 +126,24 @@ def hash_reorder_banked(
     payload = secondary.shape[1:]
 
     sets = _hash_set(indices // jnp.int32(epb), num_sets)
-    part = sets % jnp.int32(nP)
+    if n_live is None:
+        live = None
+        part = sets % jnp.int32(nP)
+        cap_eff = jnp.int32(C)
+    else:
+        m_live = jnp.clip(jnp.asarray(n_live, jnp.int32), 0, n)
+        live = jnp.arange(n, dtype=jnp.int32) < m_live
+        # sentinel partition: dead lanes never land in a bank row and drop
+        # out of the partition counts (out-of-range scatter indices drop)
+        part = jnp.where(live, sets % jnp.int32(nP), jnp.int32(nP))
+        # the bypass decision the oracle makes on the live prefix:
+        # partition_capacity(m_live, nP), traced (static row width C only
+        # bounds the buffer; capacity is monotone in n so C >= cap_eff)
+        per = (m_live + jnp.int32(nP) - 1) // jnp.int32(nP)
+        cap_eff = jnp.minimum(m_live, per + jnp.maximum(jnp.int32(64),
+                                                        per // 4))
     cnt = jnp.zeros((nP,), jnp.int32).at[part].add(1)
-    overflow = jnp.max(cnt) > jnp.int32(C)
+    overflow = jnp.max(cnt) > cap_eff
 
     if bank_map not in ("map", "vmap"):
         raise ValueError(f"bank_map must be 'map' or 'vmap', got {bank_map!r}")
@@ -139,7 +165,12 @@ def hash_reorder_banked(
         # composite key: partition-major, set-minor, stream-stable — the one
         # big sort of the engine (the flat engine's set sort on a fused key).
         # Built inside the branch so the capacity bypass never pays for it.
-        order = jnp.argsort(part * jnp.int32(num_sets) + sets, stable=True)
+        # Dead lanes share one maximal key so they sink as a stream-ordered
+        # block behind every partition.
+        skey = part * jnp.int32(num_sets) + (
+            sets if live is None else jnp.where(live, sets,
+                                                jnp.int32(num_sets)))
+        order = jnp.argsort(skey, stable=True)
         S = sets[order]
         I = indices[order]
         V = jnp.take(secondary, order, axis=0)
@@ -193,6 +224,16 @@ def hash_reorder_banked(
             opos.reshape(-1), mode="drop")
         out_act = jnp.zeros((n,), jnp.bool_).at[g].set(
             oact.reshape(-1), mode="drop")
+        if live is not None:
+            # dead lanes never entered a bank row; they fill the gap between
+            # the partition fronts and the filtered tails, in stream order,
+            # carrying their original values (active stays False)
+            live_s = live[order]
+            dead_rank = jnp.cumsum((~live_s).astype(jnp.int32)) - 1
+            gd = jnp.where(live_s, jnp.int32(n), jnp.sum(m) + dead_rank)
+            out_idx = out_idx.at[gd].set(I, mode="drop")
+            out_sec = out_sec.at[gd].set(V, mode="drop")
+            out_pos = out_pos.at[gd].set(Pos, mode="drop")
         return out_idx, out_sec, out_pos, out_act
 
     def flat_fn(_):
@@ -201,6 +242,27 @@ def hash_reorder_banked(
         return hash_reorder_batched(
             indices, secondary, num_sets=num_sets, slots=slots,
             elem_bytes=elem_bytes, block_bytes=block_bytes,
-            filter_op=filter_op, round_cap=round_cap)
+            filter_op=filter_op, round_cap=round_cap, n_live=n_live)
 
+    if live is not None and _two_gen_fits(n, num_sets):
+        # ragged fast path: when every live set stays within two occupancy
+        # generations (and no partition trips the round-cap fallback), the
+        # whole banked reorder is the two-generation closed form with
+        # partition-major computed emission — no bank scatter, no per-row
+        # stage.  Same partition sharding (set % P), same capacity bypass
+        # (the ``overflow`` arm), so this is exactly
+        # ``hash_reorder_ref_banked`` on the live prefix.  The global raw
+        # round bound folded into ``ok`` implies every per-partition bound,
+        # so no partition the oracle would dense-fallback takes this arm.
+        ok, plan = _two_gen_plan(
+            indices, secondary, live, sets, n_partitions=nP,
+            num_sets=num_sets, slots=slots, filter_op=filter_op,
+            round_cap=round_cap)
+        branch = jnp.where(overflow, jnp.int32(0),
+                           jnp.where(ok, jnp.int32(2), jnp.int32(1)))
+        return jax.lax.switch(
+            branch,
+            [flat_fn, banked_fn,
+             lambda _: _two_gen_emit(indices, secondary, plan)],
+            None)
     return jax.lax.cond(overflow, flat_fn, banked_fn, None)

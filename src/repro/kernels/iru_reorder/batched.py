@@ -174,6 +174,232 @@ def _keys_hash_filter(I, Pos, valid, seg_fields, psr, *, slots: int):
     return filtered, band, key, round_of
 
 
+def _keys_single_round(I, V, Pos, S, valid, seg_fields, *, slots: int,
+                       filter_op: str):
+    """Closed form for streams whose round bound collapses to one round
+    (every live set's raw count fits in ``slots`` — the common case for
+    sparse ragged frontiers, where most sets see a handful of elements).
+
+    With at most one round per set the peeling semantics are static:
+
+    * an element is filtered exactly when ANY same-(set, index)
+      predecessor exists (the whole segment is round 0);
+    * a set flushes exactly when its raw count is ``slots`` with zero
+      duplicates (only then does the ``slots``-th *kept* element arrive),
+      and the trigger is the segment's last element; every other set
+      drains;
+    * the payload merge is one (set, index)-run segment reduction (the
+      round id never splits a run).
+
+    One lexsort plus a few scatters replace the round-peeling
+    ``while_loop``, its psr precomputation and the 4-key merge lexsort.
+    """
+    n = I.shape[0]
+    _, _, seg_id, rank, seg_len, seg_set, _ = seg_fields
+    o2 = jnp.lexsort((rank, I, S))
+    run_new = jnp.concatenate([
+        jnp.ones((1,), jnp.bool_),
+        (S[o2][1:] != S[o2][:-1]) | (I[o2][1:] != I[o2][:-1])])
+    run_new = run_new | ~valid[o2]      # padding lanes never join runs
+    rid = jnp.cumsum(run_new.astype(jnp.int32)) - 1
+    lead_pos = _seg_scatter(rid, jnp.where(run_new, o2, 0), n)
+    leader_of = jnp.zeros((n,), jnp.int32).at[o2].set(lead_pos[rid])
+    first = jnp.zeros((n,), jnp.bool_).at[o2].set(run_new)
+    filtered = valid & ~first
+    acc = _scatter_merge(V, jnp.where(filtered, leader_of, n), filter_op)
+    kept = _seg_scatter(seg_id, (~filtered & valid).astype(jnp.int32), n)
+    flush_seg = (seg_len == slots) & (kept == slots)
+    trig_pos = jnp.zeros((n,), jnp.int32).at[seg_id].max(Pos)
+    band = jnp.where(flush_seg, BAND_FLUSH, BAND_DRAIN)[seg_id]
+    key = jnp.where(flush_seg, trig_pos, seg_set)[seg_id]
+    return filtered, band, key, acc
+
+
+def _two_gen_fits(n: int, num_sets: int) -> bool:
+    """Static guard: the packed ``set * n + lane`` key of the direct path's
+    set-major value sort must fit int32 (x64 stays off).  Beyond it the
+    presorted pipeline handles the stream."""
+    return (num_sets + 1) * max(n, 1) <= 2**31
+
+
+def _two_gen_plan(indices, secondary, live, sets, *, n_partitions: int,
+                  num_sets: int, slots: int, filter_op: Optional[str],
+                  round_cap: Optional[int]):
+    """Closed-form analysis of a ragged stream under the *two-generation*
+    specialization of the hash oracle, and the exactness guard for it.
+
+    A hash set lives through at most two generations when its occupancy
+    reaches ``slots`` at most once: generation 1 runs until the ``slots``-th
+    insertion (= the ``slots``-th first occurrence, position ``T`` — the
+    flush trigger), everything after ``T`` re-inserts into the emptied set
+    and drains at end of stream.  Duplicates merge only against *resident*
+    entries, so dedup is per (index run, generation): one stable index sort
+    finds global first occurrences, and a segmented rank over the same sort
+    finds each run's first post-``T`` element (the generation-2 re-insert).
+    Sparse frontiers live here: block-clustered wavefronts routinely push a
+    set's *raw* count past ``slots`` on duplicates alone while its resident
+    occupancy never wraps twice.
+
+    Everything else is counting, not sorting: per-set insertion ranks come
+    from segmented cumsums over a set-major order obtained with one *packed
+    value sort* (``set * n + lane`` — single-key sorts avoid XLA's variadic
+    comparator), flush ranks from a cumsum over trigger positions, and every
+    element's output slot is computed directly — partition fronts (flushes
+    by trigger time, then drains by set id, insertion order within each),
+    dead lanes in stream order, partition filtered tails in reverse
+    detection order — so emission is one scatter instead of an O(n log n)
+    stable argsort.
+
+    Exactness guard (``ok``): no set may start a third generation or flush
+    twice (per-set kept count under ``2 * slots`` whenever it flushed), and
+    with a filter op under a round cap the oracle's dense-fallback rule is
+    decided on the raw live counts — streams past the cap decline the
+    direct path so the presorted machinery applies the fallback.
+
+    Returns ``(ok, (outpos, kept, acc))`` — feed to :func:`_two_gen_emit`
+    inside the branch ``ok`` selects.
+    """
+    n = indices.shape[0]
+    nP = n_partitions
+    i32 = jnp.int32
+    ar = jnp.arange(n, dtype=i32)
+    # dead lanes take the sentinel set so every scatter drops them
+    sets_l = jnp.where(live, sets, i32(num_sets))
+
+    # ---- global first occurrences (generation-1 insertions) ---------------
+    if filter_op is not None:
+        Ik = jnp.where(live, indices, _INT32_MAX)
+        o = jnp.argsort(Ik, stable=True)
+        run_new = jnp.concatenate([
+            jnp.ones((1,), jnp.bool_), Ik[o][1:] != Ik[o][:-1]])
+        run_new = run_new | ~live[o]    # dead lanes never join runs
+        rid = jnp.cumsum(run_new.astype(i32)) - 1
+        first = jnp.zeros((n,), jnp.bool_).at[o].set(run_new) & live
+    else:
+        first = live                    # no merging: every live lane inserts
+
+    # ---- set-major position order (one packed value sort) -----------------
+    so = jnp.sort(sets_l * i32(n) + ar)
+    o_s = so % i32(n)                   # lanes, position-ordered per set
+    S_s = so // i32(n)
+    seg_new = jnp.concatenate([
+        jnp.ones((1,), jnp.bool_), S_s[1:] != S_s[:-1]])
+
+    def seg_rank(flags):
+        # inclusive rank of flagged lanes within their set segment
+        c = jnp.cumsum(flags.astype(i32))
+        base = jax.lax.cummax(jnp.where(seg_new, c - flags.astype(i32), 0))
+        return c - base
+
+    # flush trigger T = position of the slots-th insertion (or n: never)
+    f_s = first[o_s]
+    trig_slot = f_s & (seg_rank(f_s) == i32(slots))
+    T = jnp.full((num_sets + 1,), i32(n)).at[
+        jnp.where(trig_slot, S_s, i32(num_sets))].min(o_s)
+    gen2 = live & (ar > T[sets_l])
+
+    # ---- generation-aware dedup and payload merge -------------------------
+    if filter_op is not None:
+        g2o = gen2[o]
+        c2 = jnp.cumsum(g2o.astype(i32))
+        base2 = jax.lax.cummax(jnp.where(run_new, c2 - g2o.astype(i32), 0))
+        first2 = g2o & ((c2 - base2) == 1)   # run's gen-2 re-insert
+        lead1 = _seg_scatter(rid, jnp.where(run_new, o, 0), n)
+        lead2 = _seg_scatter(rid, jnp.where(first2, o, 0), n)
+        kept = jnp.zeros((n,), jnp.bool_).at[o].set(run_new | first2) & live
+        filtered = live & ~kept
+        leader_of = jnp.zeros((n,), i32).at[o].set(
+            jnp.where(g2o, lead2[rid], lead1[rid]))
+        acc = _scatter_merge(secondary, jnp.where(filtered, leader_of, n),
+                             filter_op)
+    else:
+        kept = live
+        filtered = jnp.zeros((n,), jnp.bool_)
+        acc = secondary
+
+    # ---- per-set layout counts and the exactness guard --------------------
+    kept_s = jnp.zeros((num_sets,), i32).at[sets_l].add(kept.astype(i32))
+    flush_s = T[:num_sets] < i32(n)
+    ok = jnp.all(jnp.where(flush_s, kept_s < i32(2 * slots), True))
+    if filter_op is not None and round_cap is not None:
+        cnt_s = jnp.zeros((num_sets,), i32).at[sets_l].add(
+            jnp.ones((n,), i32))
+        r_raw = jnp.max((cnt_s + i32(slots) - 1) // i32(slots))
+        ok = ok & (r_raw <= i32(round_cap))
+    drain_s = kept_s - jnp.where(flush_s, i32(slots), 0)
+
+    # ---- output positions: partition fronts / dead lanes / tails ----------
+    set_ar = jnp.arange(num_sets, dtype=i32)
+    p_set = set_ar % i32(nP)
+    nflush_p = jnp.zeros((nP,), i32).at[p_set].add(
+        jnp.where(flush_s, i32(slots), 0))
+    ndrain_p = jnp.zeros((nP,), i32).at[p_set].add(drain_s)
+    front_p = nflush_p + ndrain_p
+    front_base = jnp.cumsum(front_p) - front_p
+    s_total = jnp.sum(front_p)
+
+    # flushed-set rank within its partition, by trigger time: triggers are
+    # distinct stream positions, so a cumsum over the position axis ranks
+    # them without a sort
+    rank_f = jnp.zeros((num_sets,), i32)
+    t_cl = jnp.clip(T[:num_sets], 0, max(n - 1, 0))
+    for p in range(nP):
+        mark = jnp.zeros((n,), i32).at[
+            jnp.where(flush_s & (p_set == p), t_cl, i32(n))].add(
+                1, mode="drop")
+        rank_f = jnp.where(flush_s & (p_set == p),
+                           jnp.cumsum(mark)[t_cl] - 1, rank_f)
+
+    # per-set drain offset: exclusive prefix over the (partition, set) grid
+    dd = jnp.zeros((nP * num_sets,), i32).at[
+        p_set * i32(num_sets) + set_ar].set(drain_s)
+    d_ex = jnp.cumsum(dd) - dd
+    drain_off = (d_ex[p_set * i32(num_sets) + set_ar]
+                 - d_ex[jnp.arange(nP, dtype=i32) * i32(num_sets)][p_set])
+
+    # per-element insertion ranks (0-based), element-aligned
+    k_s = kept[o_s]
+    g2_s = gen2[o_s]
+    rank1 = jnp.zeros((n,), i32).at[o_s].set(seg_rank(k_s & ~g2_s)) - 1
+    rank2 = jnp.zeros((n,), i32).at[o_s].set(seg_rank(k_s & g2_s)) - 1
+
+    sc = jnp.clip(sets_l, 0, max(num_sets - 1, 0))
+    p_e = p_set[sc]
+    flush_e = flush_s[sc]
+    is_flush = kept & ~gen2 & flush_e
+    pos_flush = front_base[p_e] + rank_f[sc] * i32(slots) + rank1
+    pos_drain = (front_base[p_e] + nflush_p[p_e] + drain_off[sc]
+                 + jnp.where(flush_e, rank2, rank1))
+
+    t_p = jnp.zeros((nP,), i32).at[jnp.where(filtered, p_e, i32(nP))].add(
+        1, mode="drop")
+    tail_base = i32(n) - jnp.sum(t_p) + (jnp.cumsum(t_p) - t_p)
+    rfil = jnp.zeros((n,), i32)
+    for p in range(nP):
+        fp = filtered & (p_e == p)
+        rfil = jnp.where(fp, jnp.cumsum(fp.astype(i32)) - 1, rfil)
+    pos_filt = tail_base[p_e] + (t_p[p_e] - 1 - rfil)
+    pos_dead = s_total + (ar - jnp.sum(live.astype(i32)))
+
+    outpos = jnp.where(is_flush, pos_flush,
+             jnp.where(kept, pos_drain,
+             jnp.where(filtered, pos_filt, pos_dead)))
+    return ok, (outpos, kept, acc)
+
+
+def _two_gen_emit(indices, secondary, plan):
+    """Place every lane at its precomputed output slot — four scatters, the
+    whole emission of the direct two-generation path."""
+    outpos, kept, acc = plan
+    n = indices.shape[0]
+    ar = jnp.arange(n, dtype=jnp.int32)
+    out_idx = jnp.zeros((n,), jnp.int32).at[outpos].set(indices)
+    out_sec = jnp.zeros_like(acc).at[outpos].set(acc)
+    out_pos = jnp.zeros((n,), jnp.int32).at[outpos].set(ar)
+    out_act = jnp.zeros((n,), jnp.bool_).at[outpos].set(kept)
+    return out_idx, out_sec, out_pos, out_act
+
+
 def _merge_payloads(I, V, S, rank, round_of, filtered, filter_op: str):
     """Fold each filtered element into the surviving leader of its
     (set, index, round) group — a segment reduction."""
@@ -262,20 +488,35 @@ def _reorder_presorted(
             acc = _merge_payloads(I, V, S, rank, round_of, filtered, filter_op)
             return filtered, band, key, acc
 
+        def single_path(_):
+            return _keys_single_round(
+                I, V, Pos, S, valid, seg_fields, slots=slots,
+                filter_op=filter_op)
+
+        # each full round consumes >= slots elements of its set, so the
+        # per-set ceil(len / slots) bounds the trip count a priori; a bound
+        # of one means the peeling loop is statically a single iteration and
+        # the closed form replaces it (only the taken branch executes)
+        seg_rounds = jnp.where(seg_set < num_sets,
+                               (seg_len + slots - 1) // slots, 0)
+        r_ub = jnp.max(seg_rounds) if n else jnp.int32(0)
         if round_cap is None:
-            filtered, band, key, acc = hash_path(None)
-        else:
-            # each full round consumes >= slots elements of its set, so the
-            # per-set ceil(len / slots) bounds the trip count a priori
-            seg_rounds = jnp.where(seg_set < num_sets,
-                                   (seg_len + slots - 1) // slots, 0)
-            r_ub = jnp.max(seg_rounds) if n else jnp.int32(0)
             filtered, band, key, acc = jax.lax.cond(
-                r_ub > round_cap,
-                lambda _: _keys_dense_merge(I, V, Pos, valid, filter_op),
-                hash_path,
+                r_ub <= 1, single_path, hash_path, None)
+        else:
+            branch = jnp.where(
+                r_ub > round_cap, jnp.int32(2),
+                jnp.where(r_ub <= 1, jnp.int32(0), jnp.int32(1)))
+            filtered, band, key, acc = jax.lax.switch(
+                branch,
+                [single_path, hash_path,
+                 lambda _: _keys_dense_merge(I, V, Pos, valid, filter_op)],
                 None)
     band = jnp.where(valid, band, BAND_PAD)
+    # padding keys collapse to 0 so pads order purely by stream position —
+    # the ragged flat path emits dead lanes between survivors and the
+    # filtered tail, and the contract wants them in stream order
+    key = jnp.where(valid, key, 0)
     filtered = filtered & valid
     return filtered, band, key, acc
 
@@ -352,9 +593,19 @@ def hash_reorder_batched(
     block_bytes: int = 128,
     filter_op: Optional[str] = None,
     round_cap: Optional[int] = None,
+    n_live: Optional[jax.Array] = None,
 ):
     """Batch-parallel hash reorder; stream-identical to ``hash_reorder_ref``
     (``ref.hash_reorder_ref_flat`` when ``round_cap`` is set).
+
+    ``n_live`` (a runtime operand, never a shape) makes the stream ragged:
+    only the first ``n_live`` lanes are real.  The result is then the oracle
+    applied to the live prefix, laid out in the same padded buffer —
+    survivors at the front, the ``n - n_live`` dead lanes in the middle in
+    stream order (``active=False``, original index/payload/position), and
+    the filtered tail closing the buffer.  Dead lanes hash to a sentinel
+    set, so every count, round bound and cap decision sees the live prefix
+    only and the round loop trips on the *live* occupancy bound.
 
     Returns ``(out_idx, out_sec, out_pos, out_act)`` arrays.
     """
@@ -366,6 +617,14 @@ def hash_reorder_batched(
                 jnp.zeros((0,), jnp.bool_))
 
     sets = _hash_set(indices // jnp.int32(epb), num_sets)
+    if n_live is None:
+        live = None
+    else:
+        m_live = jnp.clip(jnp.asarray(n_live, jnp.int32), 0, n)
+        live = jnp.arange(n, dtype=jnp.int32) < m_live
+        # sentinel set: dead lanes sort to the tail as inert padding and
+        # drop out of every bincount (out-of-range scatter indices drop)
+        sets = jnp.where(live, sets, jnp.int32(num_sets))
 
     def hash_fn(_):
         order = jnp.argsort(sets, stable=True)   # set-major, stream order kept
@@ -373,14 +632,33 @@ def hash_reorder_batched(
         I = indices[order]
         V = jnp.take(secondary, order, axis=0)
         Pos = order.astype(jnp.int32)
-        valid = jnp.ones((n,), jnp.bool_)
+        valid = jnp.ones((n,), jnp.bool_) if live is None else live[order]
         filtered, band, key, acc = _reorder_presorted(
             I, V, Pos, S, valid,
             num_sets=num_sets, slots=slots, filter_op=filter_op,
-            round_cap=None)  # the cap decision already happened below
+            # padded streams decide the cap below, before paying the sort;
+            # ragged streams decide inside the sorted layout where the
+            # live-only segment lengths are already on hand
+            round_cap=(round_cap if live is not None else None))
         return _assemble(I, V, Pos, valid, filtered, band, key, acc)
 
-    if filter_op is None or round_cap is None:
+    if live is not None and _two_gen_fits(n, num_sets):
+        # ragged fast path: analyze the live prefix under the two-generation
+        # closed form (real sparse frontiers live there — raw set counts
+        # blow past ``slots`` on block-clustered duplicates while resident
+        # occupancy wraps at most once); when exact, emission is computed
+        # output positions plus one scatter — cheaper than even the padded
+        # dense fallback, which is what makes sparse-frontier raggedness a
+        # win rather than a wash
+        ok, plan = _two_gen_plan(
+            indices, secondary, live, sets, n_partitions=1,
+            num_sets=num_sets, slots=slots, filter_op=filter_op,
+            round_cap=round_cap)
+        return jax.lax.cond(
+            ok,
+            lambda _: _two_gen_emit(indices, secondary, plan),
+            hash_fn, None)
+    if filter_op is None or round_cap is None or live is not None:
         return hash_fn(None)
     # round-cap hybrid: the trip-count bound is one bincount away, so decide
     # before paying the set sort — the dense fallback needs neither it nor

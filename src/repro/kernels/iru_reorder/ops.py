@@ -60,8 +60,14 @@ def hash_reorder(
     round_cap: Optional[int] = None,
     mesh=None,
     bank_map: str = "map",
+    n_live: Optional[jax.Array] = None,
 ):
-    """Paper-faithful O(n) bounded reorder. Returns an ``IRUStream``."""
+    """Paper-faithful O(n) bounded reorder. Returns an ``IRUStream``.
+
+    ``n_live`` (runtime operand) selects ragged execution: the batched /
+    banked engines operate on the live prefix only and emit the dead lanes
+    as inactive filler — see ``hash_reorder_batched`` for the layout.
+    """
     from repro.core.iru import IRUStream  # late import: core imports us lazily
 
     if secondary is None:
@@ -82,6 +88,7 @@ def hash_reorder(
                 round_cap=round_cap,
                 mesh=mesh,
                 bank_map=bank_map,
+                n_live=n_live,
             )
         else:
             out = hash_reorder_batched(
@@ -93,6 +100,7 @@ def hash_reorder(
                 block_bytes=block_bytes,
                 filter_op=filter_op,
                 round_cap=round_cap,
+                n_live=n_live,
             )
     elif engine == "pallas":
         if secondary.ndim != 1:
@@ -103,6 +111,10 @@ def hash_reorder(
             raise NotImplementedError(
                 "the pallas engine is the single-partition behavioural twin; "
                 "use engine='batched' for n_partitions > 1 / round_cap")
+        if n_live is not None:
+            raise NotImplementedError(
+                "ragged execution (n_live) is a batched-engine feature; the "
+                "element-sequential pallas twin models padded streams only")
         out = hash_reorder_pallas(
             indices,
             secondary,

@@ -449,6 +449,47 @@ def hash_reorder_ref_flat(
         elem_bytes=elem_bytes, block_bytes=block_bytes, filter_op=filter_op)
 
 
+def ragged_oracle(
+    oracle,
+    indices: np.ndarray,
+    secondary: np.ndarray,
+    n_live: int,
+    **kwargs,
+):
+    """Compose any reorder oracle with the ragged-prefix output contract.
+
+    This IS the semantics the JAX engines implement for ``n_live``: run
+    ``oracle`` on the live prefix, then lay the result out in the original
+    padded buffer — survivors at the front, the dead lanes in the middle in
+    stream order (``active=False``, original index/payload/position), and
+    the filtered tail closing the buffer.  The engine parity tests compare
+    against this composition; keeping it next to the oracles makes the
+    ragged contract part of the semantics rather than a per-test idiom.
+    """
+    indices = np.asarray(indices, np.int32)
+    secondary = np.asarray(secondary)
+    n = indices.shape[0]
+    m = int(np.clip(n_live, 0, n))
+    oi, osec, opos, oact = oracle(indices[:m], secondary[:m], **kwargs)
+    t = int((~oact).sum())
+    s = m - t
+    payload = secondary.shape[1:]
+    out_idx = np.zeros(n, np.int32)
+    out_sec = np.zeros((n,) + payload, secondary.dtype)
+    out_pos = np.zeros(n, np.int32)
+    out_act = np.zeros(n, bool)
+    out_idx[:s], out_sec[:s], out_pos[:s] = oi[:s], osec[:s], opos[:s]
+    out_act[:s] = True
+    out_idx[s : n - t] = indices[m:]
+    out_sec[s : n - t] = secondary[m:]
+    out_pos[s : n - t] = np.arange(m, n, dtype=np.int32)
+    if t:
+        out_idx[n - t :] = oi[m - t :]
+        out_sec[n - t :] = osec[m - t :]
+        out_pos[n - t :] = opos[m - t :]
+    return out_idx, out_sec, out_pos, out_act
+
+
 def hash_reorder_ref_banked(
     indices: np.ndarray,
     secondary: np.ndarray,

@@ -1,0 +1,117 @@
+"""Property-based tests (hypothesis) for ragged (live-prefix) execution.
+
+The invariant: for ANY stream, ANY live count and ANY engine geometry, the
+ragged run is bit-identical to ``ref.ragged_oracle`` — i.e. to running the
+padded engine on just the live prefix and splicing the dead lanes between
+survivors and the filtered tail.  Checked under plain eager, under ``jit``
+(live count as a traced operand) and under ``vmap`` (a batch of streams
+sharing one compiled reorder, each row with its own live count).
+
+Runs where hypothesis is installed (CI installs it; the fixed-seed sweeps in
+test_iru_ragged.py cover environments without it).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="hypothesis not installed in this environment")
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.iru_reorder import ref
+from repro.kernels.iru_reorder.ops import hash_reorder
+
+# one modest geometry per engine keeps the compile count low; the live
+# count, stream contents and stream length are the hypothesis-driven parts
+N_MAX = 96
+GEOMS = [
+    dict(num_sets=8, slots=4, filter_op="min", n_partitions=1),
+    dict(num_sets=16, slots=2, filter_op="add", n_partitions=1, round_cap=2),
+    dict(num_sets=8, slots=4, filter_op="min", n_partitions=4),
+]
+
+
+def _oracle(idx, sec, m, geom):
+    kw = dict(geom)
+    if kw.pop("n_partitions", 1) > 1:
+        return ref.ragged_oracle(ref.hash_reorder_ref_banked, idx, sec, m,
+                                 n_partitions=geom["n_partitions"], **{
+                                     k: v for k, v in kw.items()})
+    return ref.ragged_oracle(ref.hash_reorder_ref_flat, idx, sec, m, **kw)
+
+
+def _check(stream, want):
+    ri, rs, rp, ra = want
+    np.testing.assert_array_equal(ri, np.asarray(stream.indices))
+    np.testing.assert_array_equal(rs, np.asarray(stream.secondary))
+    np.testing.assert_array_equal(rp, np.asarray(stream.positions))
+    np.testing.assert_array_equal(ra, np.asarray(stream.active))
+
+
+stream_strategy = st.tuples(
+    st.integers(min_value=1, max_value=N_MAX),        # n (padded size)
+    st.integers(min_value=0, max_value=N_MAX + 8),    # n_live (may exceed n)
+    st.integers(min_value=0, max_value=2**32 - 1),    # contents seed
+    st.sampled_from(range(len(GEOMS))))
+
+
+@settings(max_examples=30, deadline=None)
+@given(sp=stream_strategy)
+def test_ragged_prefix_matches_padded_prefix_oracle(sp):
+    n, m_raw, seed, gi = sp
+    geom = GEOMS[gi]
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, 4 * n + 1, n).astype(np.int32)
+    sec = rng.integers(0, 1000, n).astype(np.float32)  # exact fp addition
+    got = hash_reorder(jnp.asarray(idx), jnp.asarray(sec),
+                       n_live=jnp.int32(m_raw), **geom)
+    _check(got, _oracle(idx, sec, min(m_raw, n), geom))
+
+
+@settings(max_examples=12, deadline=None)
+@given(sp=stream_strategy)
+def test_ragged_under_jit_matches_eager(sp):
+    n, m_raw, seed, gi = sp
+    geom = GEOMS[gi]
+    rng = np.random.default_rng(seed)
+    idx = jnp.asarray(rng.integers(0, 4 * n + 1, n).astype(np.int32))
+    sec = jnp.asarray(rng.integers(0, 1000, n).astype(np.float32))
+
+    @jax.jit
+    def f(i, s, m):
+        st_ = hash_reorder(i, s, n_live=m, **geom)
+        return st_.indices, st_.secondary, st_.positions, st_.active
+
+    ji, js, jp, ja = f(idx, sec, jnp.int32(m_raw))
+    _check(hash_reorder(idx, sec, n_live=jnp.int32(m_raw), **geom),
+           (np.asarray(ji), np.asarray(js), np.asarray(jp), np.asarray(ja)))
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**32 - 1),
+       gi=st.sampled_from(range(len(GEOMS))),
+       lives=st.lists(st.integers(0, 64), min_size=2, max_size=4))
+def test_ragged_under_vmap_rows_are_independent(seed, gi, lives):
+    """A batch of streams through one vmapped reorder: every row equals its
+    own solo ragged run (per-row live counts do not interfere)."""
+    geom = GEOMS[gi]
+    n = 64
+    rng = np.random.default_rng(seed)
+    B = len(lives)
+    idx = rng.integers(0, 4 * n + 1, (B, n)).astype(np.int32)
+    sec = rng.integers(0, 1000, (B, n)).astype(np.float32)
+    ms = jnp.asarray(np.array(lives, np.int32))
+
+    vf = jax.vmap(lambda i, s, m: hash_reorder(i, s, n_live=m, **geom))
+    out = vf(jnp.asarray(idx), jnp.asarray(sec), ms)
+    for b in range(B):
+        _check(
+            hash_reorder(jnp.asarray(idx[b]), jnp.asarray(sec[b]),
+                         n_live=jnp.int32(lives[b]), **geom),
+            (np.asarray(out.indices[b]), np.asarray(out.secondary[b]),
+             np.asarray(out.positions[b]), np.asarray(out.active[b])))
+        _check(
+            hash_reorder(jnp.asarray(idx[b]), jnp.asarray(sec[b]),
+                         n_live=jnp.int32(lives[b]), **geom),
+            _oracle(idx[b], sec[b], min(lives[b], n), geom))
