@@ -5,8 +5,8 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-ci test-fast bench bench-quick bench-iru bench-iru-quick \
-	bench-apps-quick bench-serving bench-ragged smoke-pipeline \
-	smoke-graph-serving
+	bench-apps-quick bench-serving bench-ragged bench-moe smoke-pipeline \
+	smoke-graph-serving smoke-moe
 
 test:
 	$(PY) -m pytest -x -q
@@ -62,3 +62,15 @@ bench-serving:
 # the pinned env hygiene
 bench-ragged:
 	$(PY) -m benchmarks.iru_throughput --ragged-only
+
+# refresh only the MoE dispatch rows of BENCH_iru.json (tokens/s sweep +
+# dense-vs-hash HLO ratios); ./bench.sh moe wraps this with the pinned env
+bench-moe:
+	$(PY) -m benchmarks.iru_throughput --moe-only
+
+# one transformer train step on the deepseek smoke config with
+# dispatch="iru_hash" (plan -> scatter -> expert matmul -> combine),
+# 3-engine parity + oracle drop accounting + the expert-parallel executor
+# on the degenerate 1-device IRU mesh — the CI MoE smoke
+smoke-moe:
+	$(PY) -m benchmarks.moe_smoke

@@ -5,6 +5,7 @@
 #   ./bench.sh                  # full sweep  (make bench-iru)
 #   ./bench.sh ragged           # padded-vs-ragged rows only (make bench-ragged)
 #   ./bench.sh serving          # serving rows only          (make bench-serving)
+#   ./bench.sh moe              # MoE dispatch rows only     (make bench-moe)
 #   ./bench.sh quick            # CI-sized smoke, no JSON write
 #
 # The hygiene (after HomebrewNLP-Jax / olmax run.sh):
@@ -32,6 +33,7 @@ case "${1:-full}" in
     full)    exec python -m benchmarks.iru_throughput ;;
     ragged)  exec python -m benchmarks.iru_throughput --ragged-only ;;
     serving) exec python -m benchmarks.iru_throughput --serving-only ;;
+    moe)     exec python -m benchmarks.iru_throughput --moe-only ;;
     quick)   exec python -m benchmarks.iru_throughput --quick ;;
-    *)       echo "usage: $0 [full|ragged|serving|quick]" >&2; exit 2 ;;
+    *)       echo "usage: $0 [full|ragged|serving|moe|quick]" >&2; exit 2 ;;
 esac

@@ -142,6 +142,24 @@ APP_ROWS_NOTE = (
     "iteration, so neither bucketing nor raggedness moves them (noise-level "
     "on these single-rep rows).")
 
+MOE_ROWS_NOTE = (
+    "moe_* rows: one MoE FFN layer forward (E=16 experts, top_k=2, "
+    "d_model=512, d_ff=1024, cf=1.25; benchmarks/moe_dispatch.py "
+    "geometry) at a token sweep, tokens/s best-of-reps. dense is the "
+    "GShard one-hot-einsum baseline: it pays O(T*E*C*D) dispatch/combine "
+    "einsum FLOPs and materializes the (T, E, C) dispatch tensor, so it "
+    "is measured only up to T=4096 on this CPU backend and its tokens/s "
+    "collapses with T by construction. iru_sorted (sort-engine emission "
+    "ordering) and iru_hash (the occupancy planner — capacity ranks and "
+    "drop accounting straight from the hash engine's set-residency "
+    "machinery, no emission sort) pay O(T*k*D) gather/scatter. On CPU "
+    "all three share the identical expert matmuls, which dominate at "
+    "small T, so wall-clock separation is modest; the "
+    "moe_dense_vs_hash_{flops,bytes}_* ratios are deterministic "
+    "compiled-HLO ratios and carry the accelerator-relevant story (the "
+    "dense dispatch tensor is the HBM cliff — see "
+    "benchmarks/moe_dispatch.py for the full sweep with extrapolation).")
+
 
 def _time(fn, *, min_time: float = 0.2, max_reps: int = 50,
           warmup: bool = True) -> float:
@@ -591,6 +609,60 @@ def serving_rows(out: dict, quick: bool = False) -> None:
           f"({out['serving_vs_sequential_solo']}x vs sequential solo runs)")
 
 
+def moe_rows(out: dict, quick: bool = False) -> None:
+    """MoE dispatch throughput (tokens/s) — the ROADMAP's MoE column.
+
+    One MoE FFN layer forward per engine at a token sweep (geometry from
+    ``benchmarks/moe_dispatch.py``), plus the deterministic compiled-HLO
+    dense-vs-hash FLOP/byte ratios.  ``tests/test_moe_dispatch.py`` pins a
+    floor on ``moe_tokens_per_s["iru_hash"]`` and on the FLOP ratio in the
+    checked-in JSON.
+    """
+    from benchmarks import moe_dispatch as md
+    from repro.models import moe as moe_mod
+
+    params, moe = md._params()
+    results = out.setdefault("results", {})
+    sizes = (1024,) if quick else (1024, 4096, 16384)
+    dense_cap = 4096  # dense @16384 is ~0.7 TFLOP of einsum — CPU-hostile
+    tokens: dict[str, dict[str, float]] = {}
+    for dispatch in md.DISPATCHES:
+        col: dict[str, float] = {}
+        for T in sizes:
+            if dispatch == "dense" and T > dense_cap:
+                continue
+
+            def fn(p, xx, _d=dispatch):
+                y, _ = moe_mod.moe_ffn(p, xx, moe, "swiglu", dispatch=_d)
+                return y
+
+            f = jax.jit(fn)
+            xr = jax.random.normal(jax.random.PRNGKey(1), (T, md.D),
+                                   jnp.float32)
+            sec = _time(lambda: f(params, xr).block_until_ready(),
+                        min_time=0.2, max_reps=10)
+            tps = round(T / sec, 1) if sec > 0 else float("inf")
+            col[str(T)] = tps
+            results.setdefault(f"moe_{dispatch}", {})[str(T)] = tps
+            print(f"T={T:>6,}  moe_{dispatch:<11} {sec*1e3:10.2f} ms   "
+                  f"{tps:14,.0f} tok/s")
+        tokens[dispatch] = col
+    out["moe_tokens_per_s"] = tokens
+    # deterministic dense-vs-hash compiled-HLO cost ratios (no wall clock;
+    # quick mode never writes JSON, so skip the extra dense compiles there)
+    for T in () if quick else (1024, 4096):
+        d = md.measure(T, "dense", params, moe, wall=False)
+        h = md.measure(T, "iru_hash", params, moe, wall=False)
+        out[f"moe_dense_vs_hash_flops_{T}"] = round(
+            d["hlo_flops"] / max(h["hlo_flops"], 1), 2)
+        out[f"moe_dense_vs_hash_bytes_{T}"] = round(
+            d["hlo_bytes"] / max(h["hlo_bytes"], 1), 2)
+        print(f"dense vs hash @T={T}: "
+              f"{out[f'moe_dense_vs_hash_flops_{T}']}x HLO flops, "
+              f"{out[f'moe_dense_vs_hash_bytes_{T}']}x HLO bytes")
+    out.setdefault("notes", {})["moe_rows"] = MOE_ROWS_NOTE
+
+
 def run(quick: bool = False, apps_only: bool = False) -> dict:
     sizes = QUICK_SIZES if quick else SIZES
     results: dict[str, dict[str, float]] = {}
@@ -620,6 +692,7 @@ def run(quick: bool = False, apps_only: bool = False) -> dict:
     }
     serving_rows(out, quick)
     ragged_rows(out, quick)
+    moe_rows(out, quick)
     key = str(100_000)
     if key in results.get("hash", {}) and key in results.get("seed_pallas", {}):
         out["speedup_hash_vs_seed_pallas_100k"] = round(
@@ -708,8 +781,12 @@ def main() -> None:
                     help="only the padded-vs-ragged rows (engine occupancy "
                          "sweep + delaunay BFS app twins), merged into the "
                          "existing BENCH_iru.json (no full re-sweep)")
+    ap.add_argument("--moe-only", action="store_true",
+                    help="only the MoE dispatch tokens/s + HLO-ratio rows, "
+                         "merged into the existing BENCH_iru.json (no full "
+                         "re-sweep)")
     args = ap.parse_args()
-    if args.serving_only or args.ragged_only:
+    if args.serving_only or args.ragged_only or args.moe_only:
         out = json.load(open(OUT_PATH)) if os.path.exists(OUT_PATH) else {}
         out.setdefault("notes", {})
         if args.serving_only:
@@ -717,6 +794,8 @@ def main() -> None:
         if args.ragged_only:
             out["notes"]["app_rows"] = APP_ROWS_NOTE
             ragged_rows(out, quick=args.quick)
+        if args.moe_only:
+            moe_rows(out, quick=args.quick)
         if not args.no_write and not args.quick:
             with open(OUT_PATH, "w") as f:
                 json.dump(out, f, indent=1)

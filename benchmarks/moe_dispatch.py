@@ -1,26 +1,32 @@
-"""Beyond-paper benchmark: IRU-sorted vs dense one-hot MoE dispatch.
+"""Beyond-paper benchmark: IRU (sorted/hash) vs dense one-hot MoE dispatch.
 
 The LM-side analogue of the paper's coalescing story: routing tokens to
 experts is an irregular access with duplicate destinations.  The dense
 (GShard-style) dispatch pays O(T*E*C*D) einsum FLOPs and materializes a
-(T, E, C) tensor; the IRU-sorted dispatch sorts the (token, expert) stream
-and pays O(T*k*D) gather/scatter work.  This harness measures compiled HLO
-FLOPs + bytes for both at a sweep of token counts, plus CPU wall time at the
-small end, and extrapolates where the dense tensor stops fitting HBM.
+(T, E, C) tensor; the IRU dispatches pay O(T*k*D) gather/scatter work —
+``iru_sorted`` through the sort engine's emission ordering, ``iru_hash``
+through the occupancy planner (``repro.moe.dispatch``), which skips the
+emission sort entirely.  This harness measures compiled HLO FLOPs + bytes
+for all three at a sweep of token counts, plus CPU wall time at the small
+end, and extrapolates where the dense tensor stops fitting HBM.
+
+Wall-clock follows the bench-harness hygiene (`benchmarks/iru_throughput._time`
+best-of-N under a min-time budget; run under ``./bench.sh`` for the pinned
+env) instead of a fixed 3-rep mean.
 """
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from benchmarks.iru_throughput import _time
 from repro.configs.base import MoEConfig
+from repro.launch.dryrun import normalize_cost_analysis
 from repro.models.common import Initializer
 from repro.models import moe as moe_mod
 
 E, K, D, F = 16, 2, 512, 1024
+DISPATCHES = ("iru_sorted", "iru_hash", "dense")
 
 
 def _params():
@@ -30,7 +36,7 @@ def _params():
     return it.params, moe
 
 
-def measure(T: int, dispatch: str, params, moe) -> dict:
+def measure(T: int, dispatch: str, params, moe, *, wall: bool = True) -> dict:
     x = jax.ShapeDtypeStruct((T, D), jnp.float32)
 
     def fn(p, xx):
@@ -39,20 +45,17 @@ def measure(T: int, dispatch: str, params, moe) -> dict:
 
     compiled = jax.jit(fn).lower(jax.tree.map(
         lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params), x).compile()
-    cost = compiled.cost_analysis()
+    cost = normalize_cost_analysis(compiled.cost_analysis())
     out = {"T": T, "dispatch": dispatch,
-           "hlo_flops": float(cost.get("flops", 0)),
-           "hlo_bytes": float(cost.get("bytes accessed", 0))}
+           "hlo_flops": float(cost.get("flops", 0)) if cost else 0.0,
+           "hlo_bytes": float(cost.get("bytes accessed", 0)) if cost else 0.0}
     C = moe_mod.capacity(T, moe)
     out["dispatch_tensor_gb"] = T * E * C * 4 / 2**30 if dispatch == "dense" else 0.0
-    if T <= 8192:  # wall-clock at small scale only
+    if wall and T <= 8192:  # wall-clock at small scale only
         xr = jax.random.normal(jax.random.PRNGKey(1), (T, D), jnp.float32)
         f = jax.jit(fn)
-        f(params, xr).block_until_ready()
-        t0 = time.monotonic()
-        for _ in range(3):
-            f(params, xr).block_until_ready()
-        out["wall_ms"] = round((time.monotonic() - t0) / 3 * 1e3, 1)
+        best = _time(lambda: f(params, xr).block_until_ready())
+        out["wall_ms"] = round(best * 1e3, 1)
     return out
 
 
@@ -60,16 +63,17 @@ def run():
     params, moe = _params()
     rows = []
     for T in (1024, 4096, 16384, 65536):
-        for dispatch in ("iru_sorted", "dense"):
+        for dispatch in DISPATCHES:
             rows.append(measure(T, dispatch, params, moe))
-    # pairwise ratios
+    # pairwise ratios: dense cost over each IRU engine's
     for T in (1024, 4096, 16384, 65536):
         d = next(r for r in rows if r["T"] == T and r["dispatch"] == "dense")
-        s = next(r for r in rows if r["T"] == T and r["dispatch"] == "iru_sorted")
-        rows.append({"T": T, "dispatch": "RATIO dense/sorted",
-                     "hlo_flops": round(d["hlo_flops"] / max(s["hlo_flops"], 1), 2),
-                     "hlo_bytes": round(d["hlo_bytes"] / max(s["hlo_bytes"], 1), 2),
-                     "dispatch_tensor_gb": d["dispatch_tensor_gb"]})
+        for eng, tag in (("iru_sorted", "sorted"), ("iru_hash", "hash")):
+            s = next(r for r in rows if r["T"] == T and r["dispatch"] == eng)
+            rows.append({"T": T, "dispatch": f"RATIO dense/{tag}",
+                         "hlo_flops": round(d["hlo_flops"] / max(s["hlo_flops"], 1), 2),
+                         "hlo_bytes": round(d["hlo_bytes"] / max(s["hlo_bytes"], 1), 2),
+                         "dispatch_tensor_gb": d["dispatch_tensor_gb"]})
     return rows
 
 

@@ -11,7 +11,7 @@ Sections:
   fig15  filter effectiveness              paper: 48.5%
   fig13  speedup / energy                  paper: 1.33x / -13%
   fig4   IRU service overhead              paper: overhead < win
-  moe    IRU-sorted vs dense MoE dispatch  beyond-paper
+  moe    IRU (sorted/hash) vs dense MoE dispatch  beyond-paper
   roofline  dry-run three-term table       EXPERIMENTS §Roofline
 """
 from __future__ import annotations
@@ -54,7 +54,7 @@ def main() -> None:
     _section("Fig 13 — speedup / energy", fig13_perf_energy)
     _section("Fig 4 — IRU service overhead vs win", fig4_overhead)
     if not args.skip_moe:
-        _section("Beyond-paper — MoE dispatch (IRU-sorted vs dense)", moe_dispatch)
+        _section("Beyond-paper — MoE dispatch (IRU sorted/hash vs dense)", moe_dispatch)
     _section("Roofline (from dry-run artifacts)", roofline)
 
 

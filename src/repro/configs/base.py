@@ -24,7 +24,7 @@ class MoEConfig:
     layer_offset: int = 0
     first_dense_layers: int = 0    # leading layers keep dense FFN (deepseek)
     capacity_factor: float = 1.25
-    dispatch: str = "iru_sorted"   # "iru_sorted" | "dense" (baseline)
+    dispatch: str = "iru_sorted"   # "iru_sorted" | "iru_hash" | "dense" (baseline)
 
 
 @dataclasses.dataclass(frozen=True)

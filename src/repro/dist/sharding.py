@@ -52,7 +52,11 @@ DEFAULT_RULES: dict[str, Rule] = {
     "heads": Rule((("model",),)),
     "kv_heads": Rule((("model",),)),
     "ffn": Rule((("model",),)),
-    "experts": Rule((("model",),)),
+    "experts": Rule((("part",), ("model",))),
+    # banked-IRU bank rows: the leading [n_partitions, ...] dim of the
+    # engine's partition-major buffers (and the MoE expert-parallel
+    # capacity buffer) shards over the IRU mesh's "part" axis
+    "iru_part": Rule((("part",),)),
     "moe_ffn": Rule((("model",),)),
     "ssm_heads": Rule((("model",),)),
     # context parallelism: scavenges whatever the other dims left idle

@@ -1,0 +1,97 @@
+"""Hash-engine dispatch planner: the occupancy plan without the emission.
+
+Expert dispatch (MoE token routing) is the one consumer of the hash engine
+that does not want the reordered *stream* — it wants the engine's occupancy
+bookkeeping itself:
+
+* the within-set insertion rank of every lane (which hash-set slot the lane
+  would occupy — for MoE, the token's position inside its expert's capacity
+  buffer);
+* the occupancy generation (which ``slots``-sized residency period the lane
+  lands in — generation 0 is the resident set before the first flush, so
+  with ``slots`` = expert capacity, "survives generation 0" IS the capacity
+  rule and every later generation is an overflow drop);
+* per-set arrival counts (the expert load histogram, and through it the
+  exact drop accounting ``count - min(count, slots)``).
+
+The consumer then scatters payload rows straight to ``set * slots + rank``:
+the capacity buffer is the materialized reorder, so emission ordering —
+the expensive half of ``hash_reorder_batched`` — never needs to run.
+
+Everything here is computed with the batched engine's own machinery, not a
+re-derivation: the set-major stable sort plus :func:`_segment_fields`
+(``batched.py``) produce the insertion ranks, the closed-form
+``rank // slots`` round structure of ``_keys_nofilter`` produces the
+generations, and ragged streams use the identical sentinel-set trick as
+``hash_reorder_batched`` (dead lanes take set ``num_sets``, so every rank,
+generation and count sees the live prefix only, with zero extra traces).
+
+The set key here is the *identity*: dispatch streams carry dense set
+indices already (an expert id IS a set id), so the block hash
+(``_hash_set(index // epb)``) that protects arbitrary memory indices from
+aliasing would only scramble a perfect key.  Callers must supply
+``sets`` in ``[0, num_sets)``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.iru_reorder.batched import _segment_fields
+
+
+@functools.partial(jax.jit, static_argnames=("num_sets", "slots"))
+def hash_dispatch(
+    sets: jax.Array,
+    *,
+    num_sets: int,
+    slots: int,
+    n_live: Optional[jax.Array] = None,
+):
+    """Occupancy plan for a direct-mapped (identity-keyed) stream.
+
+    ``sets``: int32[n] dense set ids in ``[0, num_sets)`` (e.g. expert ids).
+    ``slots``: the per-set residency bound (e.g. expert capacity).
+    ``n_live`` (runtime operand, never a shape): only the first ``n_live``
+    lanes are real; dead lanes report ``live=False`` and drop out of every
+    rank and count, exactly like the reorder engines' ragged contract.
+
+    Returns ``(rank, generation, live, counts)``:
+
+    * ``rank``       int32[n] — within-set insertion rank in stream order
+                     (the hash-set slot across generations);
+    * ``generation`` int32[n] — ``rank // slots``, the occupancy round the
+                     lane lands in (0 = resident before the first flush);
+    * ``live``       bool[n]  — lane carries a real element;
+    * ``counts``     int32[num_sets] — live arrivals per set.
+
+    Dead lanes carry ``rank``/``generation`` of the inert sentinel segment;
+    consumers must gate on ``live`` (``keep = live & (generation == 0)`` is
+    the capacity rule).
+    """
+    sets = jnp.asarray(sets).astype(jnp.int32)
+    n = sets.shape[0]
+    if n_live is None:
+        live = jnp.ones((n,), jnp.bool_)
+        sets_l = sets
+    else:
+        m = jnp.clip(jnp.asarray(n_live, jnp.int32), 0, n)
+        live = jnp.arange(n, dtype=jnp.int32) < m
+        # sentinel set: dead lanes sort to the tail as an inert segment and
+        # drop out of the counts (out-of-range scatter indices drop)
+        sets_l = jnp.where(live, sets, jnp.int32(num_sets))
+
+    # the batched engine's first stage verbatim: set-major stable sort, then
+    # segmented within-set ranks over the sorted layout
+    order = jnp.argsort(sets_l, stable=True)
+    S = sets_l[order]
+    _, _, _, rank_sorted, _, _, _ = _segment_fields(S)
+    rank = jnp.zeros((n,), jnp.int32).at[order].set(rank_sorted)
+    # _keys_nofilter's closed-form round boundary: every `slots` arrivals
+    # end a residency generation
+    generation = rank // jnp.int32(max(slots, 1))
+    counts = jnp.zeros((num_sets,), jnp.int32).at[sets_l].add(1)
+    return rank, generation, live, counts

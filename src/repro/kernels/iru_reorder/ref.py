@@ -533,3 +533,37 @@ def hash_reorder_ref_banked(
     parts = fronts + tails
     return tuple(np.concatenate([q[i] for q in parts], axis=0)
                  for i in range(4))
+
+
+def moe_dispatch_ref(
+    experts,
+    cap: int,
+    n_experts: int,
+    n_live: int | None = None,
+):
+    """Numpy oracle for the MoE dispatch plan (identity-keyed hash occupancy).
+
+    ``experts``: int (T, k) routed expert ids, flattened token-major into the
+    (token, expert) lane stream.  ``cap`` is the per-expert capacity (the
+    hash engine's ``slots`` bound), ``n_live`` the live *token* prefix.
+    Returns ``(rank, keep, counts, dropped)``: per-lane arrival rank within
+    the lane's expert, the capacity survival mask (live and rank < cap),
+    the per-expert live arrival counts and overflow drop counts — the exact
+    integers the planner (``repro.moe.dispatch.plan_dispatch``) must emit.
+    """
+    experts = np.asarray(experts, np.int64)
+    T, k = experts.shape
+    flat = experts.reshape(-1)
+    lanes = flat.shape[0]
+    live_lanes = lanes if n_live is None else max(0, min(int(n_live), T)) * k
+
+    rank = np.zeros(lanes, np.int32)
+    counts = np.zeros(n_experts, np.int64)
+    for i in range(live_lanes):                    # arrival order, one pass
+        e = int(flat[i])
+        rank[i] = counts[e]
+        counts[e] += 1
+    keep = np.zeros(lanes, bool)
+    keep[:live_lanes] = rank[:live_lanes] < cap
+    dropped = counts - np.minimum(counts, cap)
+    return rank, keep, counts.astype(np.int32), dropped.astype(np.int32)

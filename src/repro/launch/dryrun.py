@@ -138,6 +138,18 @@ def _stage_geometry(cfg: ModelConfig):
     return lead, unit, rep, cfg.encoder_layers
 
 
+def normalize_cost_analysis(cost):
+    """Normalize ``Compiled.cost_analysis()`` across jax versions.
+
+    Older jax returns one properties dict per partition (a list); newer
+    returns the dict directly.  Returns the dict, or None when empty —
+    the single place this quirk is handled (benchmarks import it too).
+    """
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else None
+    return cost
+
+
 def _variant(cfg: ModelConfig, dec_units: int, enc_layers: int) -> ModelConfig:
     lead, unit, _, enc = _stage_geometry(cfg)
     return dataclasses.replace(
@@ -166,10 +178,7 @@ def _measure(cfg_v: ModelConfig, pcfg: ParallelConfig, shape: ShapeConfig,
         compiled = lowered.compile()
         t_compile = time.monotonic() - t0 - t_lower
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
-        # older jax returns one dict per partition; newer returns the dict
-        if isinstance(cost, (list, tuple)):
-            cost = cost[0] if cost else None
+        cost = normalize_cost_analysis(compiled.cost_analysis())
         hlo = compiled.as_text()
         del compiled, lowered
     coll = hlo_stats.collective_stats(hlo, n_dev)

@@ -42,9 +42,17 @@ def main() -> None:
     ap.add_argument("--inject-faults", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--moe-dispatch", choices=["iru_sorted", "iru_hash", "dense"],
+                    default=None,
+                    help="override MoEConfig.dispatch (MoE archs only)")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.moe_dispatch is not None:
+        if cfg.moe is None:
+            ap.error(f"--moe-dispatch set but arch {cfg.name!r} has no MoE layers")
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch=args.moe_dispatch))
     pcfg = ParallelConfig(model_axis=1, remat="full", microbatches=args.microbatches,
                           attn_chunk=min(256, args.seq))
     tc = TrainConfig(

@@ -1,36 +1,45 @@
-"""Mixture-of-Experts FFN with IRU-sorted dispatch.
+"""Mixture-of-Experts FFN layer — a thin shell over ``repro.moe``.
 
-Routing tokens to experts IS the paper's irregular access: every token issues
-``expert_buffer[route[i]] <- x[i]`` — duplicate destinations, no locality.
-Two dispatch engines:
+Routing tokens to experts IS the paper's irregular access: every token
+issues ``expert_buffer[route[i]] <- x[i]`` — duplicate destinations, no
+locality.  The dispatch engines live in the expert-dispatch subsystem
+(``repro.moe``); this module owns only what is model-layer concern:
+parameter initialization, engine selection from ``MoEConfig.dispatch``,
+and the always-on shared experts (DeepSeek).
 
-* ``dense``  — the GShard/Mesh-TF one-hot-einsum baseline.  Builds a
-  (T, E, C) dispatch tensor and pays ``T*E*C*D`` FLOPs in the dispatch and
-  combine einsums.  This is the "baseline GPU" analogue: correct, regular,
-  and catastrophically wasteful at scale — at the assigned shapes the
-  dispatch tensor alone would not fit in HBM (see benchmarks/moe_dispatch.py)
-  so it is only runnable at reduced sizes.
-* ``iru_sorted`` — the IRU pipeline: *reorder* the (token, expert) stream by
-  expert id (``iru_reorder``, sort engine), compute each token's rank within
-  its expert run (the hash-set slot), drop overflow beyond capacity (the
-  bounded-entry flush), scatter into a contiguous per-expert buffer, run the
-  expert matmuls segment-contiguously, and combine back through the saved
-  ``positions`` (the paper's ``pos`` return).  Cost is proportional to the
-  *active* token stream, exactly like the IRU servicing only real accesses.
+Three engines, selected by ``MoEConfig.dispatch``:
+
+* ``dense``      — the GShard/Mesh-TF one-hot-einsum baseline: correct,
+  regular, and catastrophically wasteful at scale (the (T, E, C) dispatch
+  tensor alone outgrows HBM — see benchmarks/moe_dispatch.py).
+* ``iru_sorted`` — the sort-engine pipeline: reorder the (token, expert)
+  stream by expert id, rank within the run, drop overflow, scatter into
+  the contiguous per-expert buffer, combine back through ``positions``.
+* ``iru_hash``   — the planned dispatch: the hash engine's occupancy
+  machinery (``repro.moe.dispatch.plan_dispatch``) produces capacity
+  ranks, drop accounting and segment offsets as a ``DispatchPlan``;
+  supports ragged microbatches (``n_live``) and expert-parallel
+  execution over a mesh (``repro.moe.ep``).
 
 The router always computes in fp32.  An auxiliary load-balancing loss
 (Switch-style) is returned alongside.
 """
 from __future__ import annotations
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import MoEConfig
-from repro.core.iru import IRUConfig, iru_reorder
-from repro.models.common import Initializer, constrain
+from repro.models.common import Initializer
+from repro.moe.dispatch import (  # noqa: F401  (re-exported: legacy import site)
+    _experts_ffn,
+    _route,
+    capacity,
+    moe_dense,
+    moe_hash,
+    moe_sorted,
+)
+from repro.moe.ep import moe_hash_ep
 
 
 def init_moe(it: Initializer, d_model: int, moe: MoEConfig, ffn_type: str) -> None:
@@ -49,114 +58,28 @@ def init_moe(it: Initializer, d_model: int, moe: MoEConfig, ffn_type: str) -> No
         it.weight("shared_wo", (d_sh, d_model), ("ffn", "embed"))
 
 
-def capacity(n_tokens: int, moe: MoEConfig) -> int:
-    c = int(n_tokens * moe.top_k * moe.capacity_factor / moe.n_experts)
-    return max(((c + 127) // 128) * 128, 128)  # MXU-aligned
-
-
-def _route(params: dict, x: jax.Array, moe: MoEConfig):
-    """fp32 router: returns (gates (T,k), experts (T,k), aux_loss)."""
-    logits = (x.astype(jnp.float32) @ params["router"]).astype(jnp.float32)
-    probs = jax.nn.softmax(logits, axis=-1)
-    gate_vals, experts = jax.lax.top_k(probs, moe.top_k)
-    gate_vals = gate_vals / jnp.maximum(jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
-    # Switch aux loss: E * sum_e (fraction_tokens_e * mean_prob_e)
-    T = x.shape[0]
-    me = jnp.mean(probs, axis=0)
-    onehot = jax.nn.one_hot(experts[:, 0], moe.n_experts, dtype=jnp.float32)
-    ce = jnp.mean(onehot, axis=0)
-    aux = moe.n_experts * jnp.sum(me * ce)
-    return gate_vals, experts, aux
-
-
-def _experts_ffn(params: dict, buf: jax.Array, ffn_type: str) -> jax.Array:
-    """buf: (E, C, D) -> (E, C, D), segment-contiguous expert matmuls."""
-    if ffn_type == "swiglu":
-        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["wg"]))
-        h = h * jnp.einsum("ecd,edf->ecf", buf, params["wi"])
-    else:
-        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, params["wi"]))
-    return jnp.einsum("ecf,efd->ecd", h, params["wo"])
-
-
-# ---------------------------------------------------------------------------
-# IRU-sorted dispatch (the paper's technique)
-# ---------------------------------------------------------------------------
-
-def moe_sorted(params: dict, x: jax.Array, moe: MoEConfig, ffn_type: str):
-    """x: (T, D) -> (T, D). Sorted-dispatch MoE."""
-    T, D = x.shape
-    C = capacity(T, moe)
-    E = moe.n_experts
-    gates, experts, aux = _route(params, x, moe)
-
-    flat_e = experts.reshape(-1)                              # (T*k,) the index stream
-    stream = iru_reorder(flat_e, config=IRUConfig(mode="sort"))
-    se = stream.indices                                       # sorted expert ids
-    spos = stream.positions                                   # original (t*k) slots
-    # rank within expert run = slot in the reorder-hash set
-    ar = jnp.arange(se.shape[0], dtype=jnp.int32)
-    first = jnp.concatenate([jnp.ones((1,), bool), se[1:] != se[:-1]])
-    run_start = jax.lax.associative_scan(jnp.maximum, jnp.where(first, ar, -1))
-    rank = ar - run_start
-    keep = rank < C                                           # bounded set: overflow drops
-    slot = jnp.where(keep, se * C + rank, E * C)              # sentinel -> dropped
-
-    src_tok = spos // moe.top_k
-    buf = jnp.zeros((E * C, D), x.dtype)
-    buf = buf.at[slot].set(jnp.take(x, src_tok, axis=0), mode="drop")
-    # NOTE: measured in §Perf — explicitly constraining the capacity buffer
-    # to ("experts","exp_cap","embed") fights SPMD propagation at the
-    # dispatch boundary (+828% collective on deepseek train); propagation
-    # chooses better here, so the buffer stays unconstrained.
-    buf = buf.reshape(E, C, D)
-
-    out = _experts_ffn(params, buf, ffn_type)
-    out = out.reshape(E * C, D)
-
-    # combine: service the reordered reply back to the original lanes
-    gathered = jnp.take(out, jnp.minimum(slot, E * C - 1), axis=0)
-    gathered = jnp.where(keep[:, None], gathered, 0)
-    w = jnp.take(gates.reshape(-1), spos)                     # gate of each sorted lane
-    y = jnp.zeros((T, D), jnp.float32).at[src_tok].add(
-        gathered.astype(jnp.float32) * w[:, None], mode="drop")
-    return y.astype(x.dtype), aux
-
-
-# ---------------------------------------------------------------------------
-# Dense one-hot dispatch (baseline; reduced sizes only)
-# ---------------------------------------------------------------------------
-
-def moe_dense(params: dict, x: jax.Array, moe: MoEConfig, ffn_type: str):
-    """GShard-style einsum dispatch. O(T*E*C*D) — baseline for comparison."""
-    T, D = x.shape
-    C = capacity(T, moe)
-    E = moe.n_experts
-    gates, experts, aux = _route(params, x, moe)
-    # position of each (t, k) within its expert, via cumsum over the T axis
-    oh = jax.nn.one_hot(experts, E, dtype=jnp.float32)        # (T, k, E)
-    ohf = oh.reshape(T * moe.top_k, E)                        # k-major within token
-    pos_in_e = (jnp.cumsum(ohf, axis=0) - ohf)                # (T*k, E)
-    rank = jnp.sum(pos_in_e * ohf, axis=-1).reshape(T, moe.top_k)
-    keep = rank < C
-    rank_oh = jax.nn.one_hot(rank, C, dtype=jnp.float32)      # (T, k, C)
-    disp = (oh * keep[..., None])[..., None] * rank_oh[:, :, None, :]  # (T,k,E,C)
-    dispatch = jnp.sum(disp, axis=1)                          # (T, E, C) 0/1
-    combine = jnp.sum(disp * gates[..., None, None], axis=1)  # (T, E, C)
-    buf = jnp.einsum("tec,td->ecd", dispatch, x.astype(jnp.float32)).astype(x.dtype)
-    out = _experts_ffn(params, buf, ffn_type)
-    y = jnp.einsum("tec,ecd->td", combine, out.astype(jnp.float32))
-    return y.astype(x.dtype), aux
-
-
 def moe_ffn(params: dict, x: jax.Array, moe: MoEConfig, ffn_type: str,
-            dispatch: str | None = None):
+            dispatch: str | None = None, *, n_live: jax.Array | None = None,
+            mesh=None):
     """x: (B, S, D) or (T, D). Routes through the configured dispatch engine
-    and adds always-on shared experts (DeepSeek) when configured."""
+    and adds always-on shared experts (DeepSeek) when configured.
+
+    ``n_live`` (live-token count, runtime operand) and ``mesh``
+    (expert-parallel execution) require the planned ``iru_hash`` engine.
+    """
     dispatch = dispatch or moe.dispatch
     shape = x.shape
     xf = x.reshape(-1, shape[-1])
-    if dispatch == "iru_sorted":
+    if dispatch == "iru_hash":
+        if mesh is not None:
+            y, aux = moe_hash_ep(params, xf, moe, ffn_type, mesh, n_live=n_live)
+        else:
+            y, aux = moe_hash(params, xf, moe, ffn_type, n_live=n_live)
+    elif n_live is not None or mesh is not None:
+        raise ValueError(
+            f"n_live/mesh need the planned engine (dispatch='iru_hash'), "
+            f"got dispatch={dispatch!r}")
+    elif dispatch == "iru_sorted":
         y, aux = moe_sorted(params, xf, moe, ffn_type)
     elif dispatch == "dense":
         y, aux = moe_dense(params, xf, moe, ffn_type)

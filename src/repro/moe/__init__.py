@@ -1,0 +1,35 @@
+"""Expert-dispatch subsystem: planner/executor MoE routing over the IRU.
+
+``repro.moe.dispatch`` plans token→expert routing through the hash
+engine's occupancy machinery (capacity = set residency, drops = overflow
+flushes) and executes the scatter → expert-FFN → combine datapath;
+``repro.moe.ep`` shards the executor's bank rows expert-parallel over an
+IRU mesh with int8-compressed combine traffic; ``repro.moe.stats`` is the
+observability layer.  ``models/moe.py`` delegates all three dispatch
+engines (dense / iru_sorted / iru_hash) here.
+"""
+from repro.moe.dispatch import (
+    DispatchPlan,
+    capacity,
+    execute_plan,
+    moe_dense,
+    moe_hash,
+    moe_sorted,
+    plan_dispatch,
+)
+from repro.moe.ep import moe_hash_ep
+from repro.moe.stats import DispatchStats, dispatch_stats, format_stats
+
+__all__ = [
+    "DispatchPlan",
+    "DispatchStats",
+    "capacity",
+    "dispatch_stats",
+    "execute_plan",
+    "format_stats",
+    "moe_dense",
+    "moe_hash",
+    "moe_hash_ep",
+    "moe_sorted",
+    "plan_dispatch",
+]

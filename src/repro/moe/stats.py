@@ -1,0 +1,72 @@
+"""Per-layer dispatch observability: what the plan did to the token stream.
+
+A :class:`DispatchStats` is pure arrays (a registered pytree, so it passes
+through ``jit`` boundaries like any activation): overflow drop accounting,
+the expert load histogram, and the load-balance quantities the Switch aux
+loss consumes (``load_fraction`` = cₑ, ``mean_prob`` = mₑ).  Everything
+derives from the :class:`~repro.moe.dispatch.DispatchPlan` — observability
+reads the routing decision, it never re-derives it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DispatchStats:
+    """Observability for one layer's dispatch. Per-expert arrays length E."""
+
+    n_routed: jax.Array       # int32[]  live (token, expert) lanes
+    n_dropped: jax.Array      # int32[]  lanes lost to capacity overflow
+    drop_rate: jax.Array      # f32[]    n_dropped / max(n_routed, 1)
+    expert_load: jax.Array    # int32[E] arrivals per expert (histogram)
+    expert_kept: jax.Array    # int32[E] arrivals served within capacity
+    load_fraction: jax.Array  # f32[E]   c_e: fraction of lanes per expert
+    mean_prob: jax.Array      # f32[E]   m_e: mean router prob (aux-loss input)
+
+
+def dispatch_stats(plan, probs: Optional[jax.Array] = None, *,
+                   n_live: Optional[jax.Array] = None) -> DispatchStats:
+    """Fold a plan (+ optional router probs (T, E)) into stats arrays."""
+    n_routed = jnp.sum(plan.counts)
+    n_dropped = jnp.sum(plan.dropped)
+    denom = jnp.maximum(n_routed, 1).astype(jnp.float32)
+    if probs is None:
+        mean_prob = jnp.zeros_like(plan.counts, jnp.float32)
+    elif n_live is None:
+        mean_prob = jnp.mean(probs.astype(jnp.float32), axis=0)
+    else:
+        T = probs.shape[0]
+        m = jnp.clip(jnp.asarray(n_live, jnp.int32), 0, T)
+        lm = (jnp.arange(T, dtype=jnp.int32) < m).astype(jnp.float32)[:, None]
+        mean_prob = (jnp.sum(probs.astype(jnp.float32) * lm, axis=0)
+                     / jnp.maximum(m.astype(jnp.float32), 1.0))
+    return DispatchStats(
+        n_routed=n_routed,
+        n_dropped=n_dropped,
+        drop_rate=n_dropped.astype(jnp.float32) / denom,
+        expert_load=plan.counts,
+        expert_kept=plan.kept,
+        load_fraction=plan.counts.astype(jnp.float32) / denom,
+        mean_prob=mean_prob,
+    )
+
+
+def format_stats(stats: DispatchStats, *, max_experts: int = 16) -> str:
+    """Host-side one-liner for logs: drop rate + load histogram sketch."""
+    load = jax.device_get(stats.expert_load)
+    kept = jax.device_get(stats.expert_kept)
+    routed = int(jax.device_get(stats.n_routed))
+    dropped = int(jax.device_get(stats.n_dropped))
+    rate = float(jax.device_get(stats.drop_rate))
+    head = ",".join(str(int(v)) for v in load[:max_experts])
+    tail = ",..." if load.shape[0] > max_experts else ""
+    imbalance = float(load.max()) / max(float(load.mean()), 1e-9)
+    return (f"dispatch: routed={routed} dropped={dropped} "
+            f"drop_rate={rate:.4f} max/mean_load={imbalance:.2f} "
+            f"kept={int(kept.sum())} load=[{head}{tail}]")
