@@ -5,8 +5,8 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-ci test-fast bench bench-quick bench-iru bench-iru-quick \
-	bench-apps-quick bench-serving bench-ragged bench-moe smoke-pipeline \
-	smoke-graph-serving smoke-moe
+	bench-apps-quick bench-serving bench-ragged bench-moe bench-dist \
+	smoke-pipeline smoke-graph-serving smoke-moe smoke-dist
 
 test:
 	$(PY) -m pytest -x -q
@@ -67,6 +67,18 @@ bench-ragged:
 # dense-vs-hash HLO ratios); ./bench.sh moe wraps this with the pinned env
 bench-moe:
 	$(PY) -m benchmarks.iru_throughput --moe-only
+
+# refresh only the distributed partitioned-pipeline rows of BENCH_iru.json
+# (weak scaling + boundary-compression headline); spawns one subprocess per
+# shard count with its own forced host device count
+bench-dist:
+	$(PY) -m benchmarks.iru_throughput --dist-only
+
+# the full partitioned machinery on 4 forced host devices at CI size:
+# partition invariants, one compressed shard_map superstep, whole-run
+# BFS/PageRank parity vs the single-device pipelines — the CI dist smoke
+smoke-dist:
+	$(PY) -m benchmarks.dist_smoke
 
 # one transformer train step on the deepseek smoke config with
 # dispatch="iru_hash" (plan -> scatter -> expert matmul -> combine),

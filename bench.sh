@@ -6,6 +6,7 @@
 #   ./bench.sh ragged           # padded-vs-ragged rows only (make bench-ragged)
 #   ./bench.sh serving          # serving rows only          (make bench-serving)
 #   ./bench.sh moe              # MoE dispatch rows only     (make bench-moe)
+#   ./bench.sh dist             # partitioned-pipeline rows  (make bench-dist)
 #   ./bench.sh quick            # CI-sized smoke, no JSON write
 #
 # The hygiene (after HomebrewNLP-Jax / olmax run.sh):
@@ -34,6 +35,9 @@ case "${1:-full}" in
     ragged)  exec python -m benchmarks.iru_throughput --ragged-only ;;
     serving) exec python -m benchmarks.iru_throughput --serving-only ;;
     moe)     exec python -m benchmarks.iru_throughput --moe-only ;;
+    # dist children REPLACE XLA_FLAGS in their own env (they need P forced
+    # host devices; the 1-device pin above only governs this parent)
+    dist)    exec python -m benchmarks.iru_throughput --dist-only ;;
     quick)   exec python -m benchmarks.iru_throughput --quick ;;
-    *)       echo "usage: $0 [full|ragged|serving|moe|quick]" >&2; exit 2 ;;
+    *)       echo "usage: $0 [full|ragged|serving|moe|dist|quick]" >&2; exit 2 ;;
 esac

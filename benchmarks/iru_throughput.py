@@ -74,6 +74,7 @@ import argparse
 import dataclasses
 import json
 import os
+import subprocess
 import sys
 import time
 
@@ -159,6 +160,23 @@ MOE_ROWS_NOTE = (
     "compiled-HLO ratios and carry the accelerator-relevant story (the "
     "dense dispatch tensor is the HBM cliff — see "
     "benchmarks/moe_dispatch.py for the full sweep with extrapolation).")
+
+DIST_ROWS_NOTE = (
+    "dist_* rows: edge-partitioned multi-device frontier pipeline "
+    "(dist.graph_partition) on forced host devices, one subprocess per "
+    "shard count (jax pins the device count at first init). Weak scaling: "
+    "delaunay side grows with sqrt(P) so per-shard work is ~constant; "
+    "eps is whole-BFS edges/s (compressed exchange, hash reorder), "
+    "parity_ok asserts BFS bit-identical + compressed PageRank allclose "
+    "vs the single-device pipelines inside each child. Forced host "
+    "devices time-slice the same CPU cores, so weak-scaling efficiency "
+    "(eps_P / eps_1) is far below 1 here by construction — the rows "
+    "track partitioning overhead, not real scaling. "
+    "dist_boundary_traffic_reduction is the MEASURED worst-case codec "
+    "win at the largest shard count: min over the flag codec (BFS, "
+    "exactly 4x: int8 presence flags vs int32 depths) and the "
+    "blockwise-int8+EF codec (PageRank rank mass, K + 4*ceil(K/128) "
+    "bytes vs 4K); tests/test_graph_partition.py pins it >= 3.")
 
 
 def _time(fn, *, min_time: float = 0.2, max_reps: int = 50,
@@ -663,6 +681,54 @@ def moe_rows(out: dict, quick: bool = False) -> None:
     out.setdefault("notes", {})["moe_rows"] = MOE_ROWS_NOTE
 
 
+def dist_rows(out: dict, quick: bool = False) -> None:
+    """Partitioned-pipeline rows — one ``dist_bench`` child per shard count.
+
+    Children get a REPLACED ``XLA_FLAGS`` (bench.sh pins one host device
+    for the single-device rows; the children need P of them).  Writes the
+    weak-scaling table, its efficiency column, the measured boundary
+    compression headline, and the all-children parity flag.
+    """
+    base = 32 if quick else 64
+    weak: dict[str, dict] = {}
+    parity = True
+    reduction = None
+    for p_n in (1, 2, 4):
+        scale = round(base * p_n ** 0.5)
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={p_n}"
+        env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+        r = subprocess.run(
+            [sys.executable, "-m", "benchmarks.dist_bench",
+             "--parts", str(p_n), "--scale", str(scale)],
+            capture_output=True, text=True, env=env,
+            cwd=os.path.join(os.path.dirname(__file__), ".."), timeout=1800)
+        if r.returncode != 0:
+            raise RuntimeError(f"dist_bench P={p_n} failed:\n{r.stderr[-2000:]}")
+        row = json.loads(r.stdout.splitlines()[-1])
+        parity = parity and row["parity_ok"]
+        weak[str(p_n)] = {k: row[k] for k in
+                          ("scale", "n", "m", "lane_cap", "supersteps",
+                           "bfs_sec", "eps", "parity_ok")}
+        if p_n > 1:
+            # worst codec at this shard count: flag (BFS) vs int8+EF (PR)
+            red = min(row["traffic_bfs"]["reduction"],
+                      row["traffic_pr"]["reduction"])
+            reduction = red if reduction is None else min(reduction, red)
+            weak[str(p_n)]["traffic_reduction"] = round(red, 2)
+        print(f"P={p_n}  delaunay scale={scale:>3}  n={row['n']:>6,}  "
+              f"{row['eps']:>12,.0f} edges/s  parity={row['parity_ok']}")
+    eff = {p: round(weak[p]["eps"] / (int(p) * weak["1"]["eps"]), 3)
+           for p in weak}
+    out["dist_weak_scaling"] = weak
+    out["dist_weak_scaling_efficiency"] = eff
+    out["dist_boundary_traffic_reduction"] = round(reduction, 2)
+    out["dist_parity_ok"] = parity
+    out.setdefault("notes", {})["dist_rows"] = DIST_ROWS_NOTE
+    print(f"dist: boundary traffic reduction {reduction:.2f}x "
+          f"(floor 3.0), parity_ok={parity}")
+
+
 def run(quick: bool = False, apps_only: bool = False) -> dict:
     sizes = QUICK_SIZES if quick else SIZES
     results: dict[str, dict[str, float]] = {}
@@ -693,6 +759,7 @@ def run(quick: bool = False, apps_only: bool = False) -> dict:
     serving_rows(out, quick)
     ragged_rows(out, quick)
     moe_rows(out, quick)
+    dist_rows(out, quick)
     key = str(100_000)
     if key in results.get("hash", {}) and key in results.get("seed_pallas", {}):
         out["speedup_hash_vs_seed_pallas_100k"] = round(
@@ -785,8 +852,13 @@ def main() -> None:
                     help="only the MoE dispatch tokens/s + HLO-ratio rows, "
                          "merged into the existing BENCH_iru.json (no full "
                          "re-sweep)")
+    ap.add_argument("--dist-only", action="store_true",
+                    help="only the partitioned-pipeline weak-scaling + "
+                         "boundary-compression rows (subprocesses with "
+                         "forced host devices), merged into the existing "
+                         "BENCH_iru.json (no full re-sweep)")
     args = ap.parse_args()
-    if args.serving_only or args.ragged_only or args.moe_only:
+    if args.serving_only or args.ragged_only or args.moe_only or args.dist_only:
         out = json.load(open(OUT_PATH)) if os.path.exists(OUT_PATH) else {}
         out.setdefault("notes", {})
         if args.serving_only:
@@ -796,6 +868,8 @@ def main() -> None:
             ragged_rows(out, quick=args.quick)
         if args.moe_only:
             moe_rows(out, quick=args.quick)
+        if args.dist_only:
+            dist_rows(out, quick=args.quick)
         if not args.no_write and not args.quick:
             with open(OUT_PATH, "w") as f:
                 json.dump(out, f, indent=1)

@@ -1,0 +1,88 @@
+"""Multi-device graph traversal end-to-end: partition → shard_map supersteps
+→ compressed boundary exchange → convergence.
+
+Walks the whole `dist.graph_partition` stack on forced host devices (the
+CPU stand-in for a TPU pod slice — set before jax initializes, because jax
+pins the device count at first init):
+
+  1. `partition_csr` splits the CSR into halo'd shards: shard p owns a
+     contiguous vertex block and ALL edges sourced there; destinations it
+     does not own are renumbered into sorted ghost slots, and static
+     send/recv maps record which ghost lane feeds which owner vertex —
+     built once, so at runtime only VALUES cross the wire, never ids
+     (that is what makes the payload compressible).
+  2. `PartitionedFrontierPipeline` runs one `core.pipeline.frontier_step`
+     per shard per superstep under `shard_map`; the scatter parks outbound
+     contributions in the ghost slots, the exchange hook gathers them into
+     [P, lane] rows, encodes, `lax.all_to_all`s, and merges them into the
+     owners before the app update sees the target — so every shard updates
+     from exactly the values a single-device step would have scattered.
+  3. The codec is per-app: BFS ships int8 presence FLAGS (the receiver
+     reconstructs depth+1 locally — exact, because supersteps advance in
+     lockstep: 4x fewer bytes), PageRank ships blockwise-int8 rank mass
+     with per-lane error feedback (~3.9x, allclose), SSSP stays exact.
+  4. Convergence is a psum'd frontier-occupancy flag checked on the host.
+
+    PYTHONPATH=src python examples/distributed_bfs.py [--parts 4]
+                                                      [--scale 48] [--exact]
+"""
+import argparse
+import os
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--parts", type=int, default=4, help="graph shards (devices)")
+ap.add_argument("--scale", type=int, default=48,
+                help="delaunay side length (n = scale^2)")
+ap.add_argument("--exact", action="store_true",
+                help="raw exchange instead of the compressed codecs")
+args = ap.parse_args()
+
+# must precede the first jax import anywhere
+os.environ.setdefault(
+    "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.parts}")
+
+import numpy as np
+
+from repro.apps import bfs_pipeline, pagerank_pipeline
+from repro.dist.graph_partition import (
+    PartitionedFrontierPipeline, partitioned_bfs_app,
+    partitioned_pagerank_app)
+from repro.graphs.csr import partition_csr, suggest_partitions
+from repro.graphs.generators import delaunay
+
+g = delaunay(scale=args.scale)
+print(f"graph: delaunay {g.n_nodes} nodes, {g.n_edges} edges")
+print(f"suggest_partitions (16 MiB VMEM budget): "
+      f"{suggest_partitions(g)} shard(s)")
+
+part = partition_csr(g, args.parts)
+print(f"partition: {part.n_parts} shards x block={part.block}, "
+      f"ghost_cap={part.ghost_cap} halo slots, "
+      f"lane_cap={part.lane_cap} boundary lanes per shard pair, "
+      f"edge_cap={part.edge_cap}")
+
+compress = not args.exact
+pipe = PartitionedFrontierPipeline(
+    part, partitioned_bfs_app(part), mode="hash", compress=compress)
+depth = np.asarray(pipe.run(0))
+ref = np.asarray(bfs_pipeline(g, 0))
+assert (depth == ref).all(), "partitioned BFS must be bit-identical"
+t = pipe.boundary_traffic()
+print(f"\nBFS: {pipe.supersteps} supersteps, {pipe.n_hops} bucket hop(s), "
+      f"parity bit-identical")
+print(f"  exchange codec={t['codec']}: "
+      f"{t['wire_bytes_per_superstep']:,} B/superstep on the wire vs "
+      f"{t['raw_bytes_per_superstep']:,} B raw "
+      f"({t['reduction']:.2f}x reduction)")
+
+pr_pipe = PartitionedFrontierPipeline(
+    part, partitioned_pagerank_app(part, iters=10), compress=compress,
+    max_iters=10)
+rank = np.asarray(pr_pipe.run(0))
+ref_pr = np.asarray(pagerank_pipeline(g, iters=10))
+err = float(np.abs(rank - ref_pr).max())
+assert np.allclose(rank, ref_pr, rtol=2e-3, atol=2e-3)
+tp = pr_pipe.boundary_traffic()
+print(f"PageRank: 10 iterations, max |err| vs single-device {err:.2e}")
+print(f"  exchange codec={tp['codec']}: {tp['reduction']:.2f}x reduction "
+      f"({tp['wire_bytes_total']:,} B total vs {tp['raw_bytes_total']:,} B raw)")

@@ -20,7 +20,7 @@ from repro.core.iru import (
     reorder_frontier,
 )
 from repro.core.pipeline import (CapacityPolicy, FrontierApp,
-                                 FrontierPipeline, StepResult)
+                                 FrontierPipeline, StepResult, frontier_step)
 
 __all__ = [
     "BLOCK_BYTES",
@@ -36,6 +36,7 @@ __all__ = [
     "coalescing_improvement",
     "compact",
     "filter_rate",
+    "frontier_step",
     "iru_reorder",
     "iru_scatter_add",
     "iru_scatter_min",

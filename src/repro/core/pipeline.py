@@ -161,6 +161,72 @@ class CapacityPolicy:
             for ec in caps)
 
 
+def frontier_step(
+    g: CSRGraph,
+    app: "FrontierApp",
+    state: State,
+    mask: jax.Array,
+    *,
+    e_cap: int,
+    f_cap: int,
+    iru_config: Optional[IRUConfig] = None,
+    gather: str = "xla",
+    ragged: bool = True,
+    exchange: Optional[Callable[[jax.Array, State], jax.Array]] = None,
+):
+    """One expand → candidate → reorder → merge-scatter → update iteration.
+
+    This is the pipeline step as a pure function of ``(graph, app, state,
+    mask)`` at one compiled capacity rung ``(e_cap, f_cap)`` — what
+    ``FrontierPipeline._step_impl`` jits per bucket, and what the
+    edge-partitioned multi-device driver (``dist.graph_partition``) runs
+    per shard under ``shard_map`` with the SAME bucketing/ragged semantics.
+
+    ``exchange``, when given, is called as ``exchange(new_target, state)``
+    between the merged scatter and ``app.update`` and must return the
+    (possibly rewritten) target array.  The partitioned driver uses it to
+    ship ghost-slot contributions to their owning shards (the boundary
+    all-to-all) before the app commits the superstep; single-device
+    execution passes ``None`` and is bit-identical to the historical step.
+
+    Returns ``(state, mask, idx, act, real, n_edges, overflow)``.
+    """
+    n = g.n_nodes
+    nodes = frontier_from_mask(mask, size=f_cap)
+    ef = expand_frontier(g, nodes, edge_capacity=e_cap, gather=gather,
+                         with_weights=app.needs_weights)
+    vals = app.candidate(state, g, ef)
+    ident = _merge_identity(app.filter_op, vals.dtype)
+    vals = jnp.where(ef.valid, vals, ident)
+    # the expansion already counted its live lanes (clamped to the
+    # bucket) — no O(capacity) reduction to recover it
+    n_edges = ef.n_valid
+    if iru_config is None:
+        idx, svals, act = ef.dsts, vals, ef.valid
+        real = ef.valid
+    else:
+        # padding lanes carry the sentinel index n: they ride through
+        # the reorder as ordinary elements (merging only with each
+        # other) and drop at the scatter — stream shape stays static.
+        # Under ragged execution the engines instead treat them as dead
+        # lanes: sorts/scans/rounds see the live prefix only, and the
+        # pads come back inactive without ever entering a hash set.
+        stream = iru_reorder(ef.dsts, vals, config=iru_config,
+                             n_live=ef.n_valid if ragged else None)
+        idx, svals = stream.indices, stream.secondary
+        act = stream.active & (stream.indices < n)
+        # expansion emits valid lanes front-packed, so a lane is a real
+        # element iff its original position is below the valid count —
+        # what the instrumented driver crops traces to (padding lanes
+        # issue no memory access and must not count in the cost model)
+        real = stream.positions < n_edges
+    new_target = _scatter(state[app.target], idx, svals, act, app.filter_op)
+    if exchange is not None:
+        new_target = exchange(new_target, state)
+    state, mask = app.update(state, new_target, g)
+    return state, mask, idx, act, real, n_edges, ef.overflow
+
+
 class StepResult(NamedTuple):
     """One dispatched pipeline step (see :meth:`FrontierPipeline.step`).
 
@@ -328,42 +394,10 @@ class FrontierPipeline:
         # closure constant: the executable is reusable across same-shape
         # graphs and the HLO carries no giant literals.  ``bucket`` is a
         # static Python int — one executable per rung.
-        app = self.app
-        n = g.n_nodes
         e_cap, f_cap = self.buckets[bucket]
-        nodes = frontier_from_mask(mask, size=f_cap)
-        ef = expand_frontier(g, nodes, edge_capacity=e_cap,
-                             gather=self.gather,
-                             with_weights=app.needs_weights)
-        vals = app.candidate(state, g, ef)
-        ident = _merge_identity(app.filter_op, vals.dtype)
-        vals = jnp.where(ef.valid, vals, ident)
-        # the expansion already counted its live lanes (clamped to the
-        # bucket) — no O(capacity) reduction to recover it
-        n_edges = ef.n_valid
-        if self.iru_config is None:
-            idx, svals, act = ef.dsts, vals, ef.valid
-            real = ef.valid
-        else:
-            # padding lanes carry the sentinel index n: they ride through
-            # the reorder as ordinary elements (merging only with each
-            # other) and drop at the scatter — stream shape stays static.
-            # Under ragged execution the engines instead treat them as dead
-            # lanes: sorts/scans/rounds see the live prefix only, and the
-            # pads come back inactive without ever entering a hash set.
-            stream = iru_reorder(ef.dsts, vals, config=self.iru_config,
-                                 n_live=ef.n_valid if self.ragged else None)
-            idx, svals = stream.indices, stream.secondary
-            act = stream.active & (stream.indices < n)
-            # expansion emits valid lanes front-packed, so a lane is a real
-            # element iff its original position is below the valid count —
-            # what the instrumented driver crops traces to (padding lanes
-            # issue no memory access and must not count in the cost model)
-            real = stream.positions < n_edges
-        new_target = _scatter(state[app.target], idx, svals, act,
-                              app.filter_op)
-        state, mask = app.update(state, new_target, g)
-        return state, mask, idx, act, real, n_edges, ef.overflow
+        return frontier_step(g, self.app, state, mask, e_cap=e_cap,
+                             f_cap=f_cap, iru_config=self.iru_config,
+                             gather=self.gather, ragged=self.ragged)
 
     def _run_impl(self, g, state, mask, it, bucket: int):
         self.n_traces += 1  # python body: executes per trace, not per call

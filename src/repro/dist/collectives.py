@@ -39,12 +39,23 @@ def allreduce_int8(x: jax.Array, mesh, axis: str) -> jax.Array:
 
     Each device quantizes its local shard to int8 before the reduction, so
     the wire carries ~1/4 of the fp32 bytes; the result is the dequantized
-    sum (bounded per-block relative error).  ``x`` is [devices, ...] and the
-    return value is the sum over that leading axis.
+    sum (bounded per-block relative error).  ``x`` is [rows, ...] with the
+    leading dim sharded over ``axis`` (any whole multiple of the axis size —
+    shards wider than one row are summed exactly on-device before the lossy
+    quantize), and the return value is the sum over that leading axis.
     """
+    axis_size = mesh.shape[axis]
+    if x.shape[0] % axis_size != 0:
+        raise ValueError(
+            f"allreduce_int8: leading dim of shape {tuple(x.shape)} does not "
+            f"divide over mesh axis {axis!r} (size {axis_size}); pad the "
+            f"leading dim to a multiple of the axis size")
 
     def body(xl):
-        local = xl.reshape(xl.shape[1:])  # leading shard dim is 1 per device
+        # exact local partial sum first (identity for one-row shards), so
+        # only one int8 payload per device crosses the wire regardless of
+        # shard width
+        local = xl.sum(axis=0)
         deq = dequantize_i8(quantize_i8(local), local.shape)
         return jax.lax.psum(deq, axis)
 

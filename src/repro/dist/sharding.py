@@ -57,6 +57,11 @@ DEFAULT_RULES: dict[str, Rule] = {
     # engine's partition-major buffers (and the MoE expert-parallel
     # capacity buffer) shards over the IRU mesh's "part" axis
     "iru_part": Rule((("part",),)),
+    # edge-partitioned graph shards: the leading [n_parts, ...] dim of
+    # GraphPartition's stacked per-shard arrays (and the partitioned
+    # pipeline's state/mask) shards one graph shard per device over the
+    # graph mesh's "gpart" axis (launch.mesh.make_graph_mesh)
+    "graph_part": Rule((("gpart",),)),
     "moe_ffn": Rule((("model",),)),
     "ssm_heads": Rule((("model",),)),
     # context parallelism: scavenges whatever the other dims left idle

@@ -141,7 +141,11 @@ class Supervisor:
                 else:
                     consecutive_slow = 0
 
-                self.history.append({"step": step, "loss": loss, "dt": dt})
+                rec = {"step": step, "loss": loss, "dt": dt}
+                for k in ("moe_drop_rate", "moe_load_imbalance"):
+                    if k in metrics:
+                        rec[k] = jax.device_get(metrics[k])
+                self.history.append(rec)
                 step += 1
                 if step % cfg.ckpt_every == 0:
                     self.manager.save(step, state)

@@ -299,3 +299,186 @@ def from_edges(
         col_idx=jnp.asarray(dst, jnp.int32),
         weights=jnp.asarray(weights),
     )
+
+
+# -- edge-partitioned multi-device layout ----------------------------------
+#
+# A 1-D block vertex partition with halo (ghost) slots, the Dehne/GraphCage
+# recipe restated for shard_map: shard ``p`` owns the contiguous vertex
+# block [p*block, (p+1)*block) and ALL edges sourced there, so its local
+# CSR slice is an exact row-range crop of the global one.  Remote
+# destinations are renumbered into ghost slots appended after the owned
+# block: local node space is [0, block) owned ++ [block, block+ghost_cap)
+# ghosts, and the expansion's padding sentinel (== local n_nodes) lands
+# PAST the ghosts, so no remote id can collide with padding.  The ghost
+# region of the scatter target starts every superstep at the merge identity
+# and accumulates only outbound candidates; the boundary exchange ships
+# those VALUES along static (slot, owner-local id) maps built once here —
+# ids never cross the wire at runtime, which is what makes the payload
+# compressible (dist.graph_partition).
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphPartition:
+    """Stacked per-shard CSR slices + static boundary maps ([P, ...])."""
+
+    # per-shard local CSR (leading dim = shard)
+    row_ptr: jax.Array    # int32[P, local_nodes + 1] (ghost rows degree-0)
+    col_idx: jax.Array    # int32[P, edge_cap] local-space dsts; pad == local_nodes
+    weights: jax.Array    # float32[P, edge_cap]
+    # ghost directory
+    ghost_ids: jax.Array  # int32[P, ghost_cap] global id per ghost slot; pad -1
+    n_ghosts: jax.Array   # int32[P]
+    n_local_edges: jax.Array  # int32[P] true (unpadded) local edge count
+    # boundary maps: lane k of the (shard, owner) pair
+    send_slot: jax.Array  # int32[P, P, lane_cap] local ghost slot to gather; pad local_nodes
+    send_mask: jax.Array  # bool[P, P, lane_cap]
+    recv_id: jax.Array    # int32[P, P, lane_cap] owner-local id (< block); pad block
+    recv_mask: jax.Array  # bool[P, P, lane_cap]
+    # static geometry
+    n_nodes: int = dataclasses.field(metadata=dict(static=True), default=0)
+    n_edges: int = dataclasses.field(metadata=dict(static=True), default=0)
+    n_parts: int = dataclasses.field(metadata=dict(static=True), default=1)
+    block: int = dataclasses.field(metadata=dict(static=True), default=0)
+    ghost_cap: int = dataclasses.field(metadata=dict(static=True), default=0)
+    lane_cap: int = dataclasses.field(metadata=dict(static=True), default=0)
+    edge_cap: int = dataclasses.field(metadata=dict(static=True), default=0)
+
+    @property
+    def local_nodes(self) -> int:
+        """Per-shard local node-space size (owned block + ghost slots)."""
+        return self.block + self.ghost_cap
+
+    def shard_graph(self, p: int) -> CSRGraph:
+        """Local CSRGraph view of shard ``p`` (host-side convenience)."""
+        return CSRGraph(row_ptr=self.row_ptr[p], col_idx=self.col_idx[p],
+                        weights=self.weights[p])
+
+
+jax.tree_util.register_dataclass(
+    GraphPartition,
+    data_fields=["row_ptr", "col_idx", "weights", "ghost_ids", "n_ghosts",
+                 "n_local_edges", "send_slot", "send_mask", "recv_id",
+                 "recv_mask"],
+    meta_fields=["n_nodes", "n_edges", "n_parts", "block", "ghost_cap",
+                 "lane_cap", "edge_cap"],
+)
+
+
+def partition_csr(graph: CSRGraph, n_parts: int, *,
+                  edge_align: int = 8) -> GraphPartition:
+    """Block-partition ``graph`` into ``n_parts`` halo'd CSR slices.
+
+    Every edge lands exactly once, on the shard owning its SOURCE vertex;
+    destinations outside the owned block are renumbered into sorted ghost
+    slots.  All shards are padded to common capacities (max local edges,
+    max ghosts, max boundary lanes per (shard, owner) pair) so the result
+    stacks into the [P, ...] arrays ``shard_map`` wants.  Pure numpy — runs
+    once per (graph, P) at partition time.
+    """
+    n_parts = int(n_parts)
+    if n_parts < 1:
+        raise ValueError(f"partition_csr: n_parts must be >= 1, got {n_parts}")
+    if n_parts > max(int(graph.n_nodes), 1):
+        raise ValueError(
+            f"partition_csr: n_parts={n_parts} exceeds n_nodes="
+            f"{int(graph.n_nodes)} — shards would own no vertices")
+    rp = np.asarray(graph.row_ptr, np.int64)
+    col = np.asarray(graph.col_idx, np.int64)
+    w = np.asarray(graph.weights, np.float32)
+    n = int(graph.n_nodes)
+    m = int(graph.n_edges)
+    block = -(-n // n_parts) if n else 1
+
+    segs = []
+    for p in range(n_parts):
+        lo = min(p * block, n)
+        hi = min(lo + block, n)
+        e0, e1 = int(rp[lo]), int(rp[hi])
+        seg_dst = col[e0:e1]
+        owned = (seg_dst >= lo) & (seg_dst < hi)
+        ghosts = np.unique(seg_dst[~owned])  # sorted: owner groups contiguous
+        segs.append((lo, hi, seg_dst, w[e0:e1], owned, ghosts))
+
+    ghost_cap = max((len(s[5]) for s in segs), default=0)
+    edge_cap = max((len(s[2]) for s in segs), default=0)
+    edge_cap = max(edge_align, -(-max(edge_cap, 1) // edge_align) * edge_align)
+    lane_cap = 0
+    for lo, hi, seg_dst, seg_w, owned, ghosts in segs:
+        if len(ghosts):
+            counts = np.bincount(ghosts // block, minlength=n_parts)
+            lane_cap = max(lane_cap, int(counts.max()))
+
+    local_nodes = block + ghost_cap
+    row_ptr_l = np.zeros((n_parts, local_nodes + 1), np.int32)
+    col_l = np.full((n_parts, edge_cap), local_nodes, np.int32)
+    w_l = np.zeros((n_parts, edge_cap), np.float32)
+    ghost_ids = np.full((n_parts, ghost_cap), -1, np.int32)
+    n_ghosts = np.zeros((n_parts,), np.int32)
+    n_local_edges = np.zeros((n_parts,), np.int32)
+    send_slot = np.full((n_parts, n_parts, lane_cap), local_nodes, np.int32)
+    send_mask = np.zeros((n_parts, n_parts, lane_cap), bool)
+    recv_id = np.full((n_parts, n_parts, lane_cap), block, np.int32)
+    recv_mask = np.zeros((n_parts, n_parts, lane_cap), bool)
+
+    for p, (lo, hi, seg_dst, seg_w, owned, ghosts) in enumerate(segs):
+        deg = rp[lo + 1:hi + 1] - rp[lo:hi]
+        cum = np.concatenate([[0], np.cumsum(deg)])
+        row_ptr_l[p, :hi - lo + 1] = cum
+        row_ptr_l[p, hi - lo + 1:] = cum[-1]  # padding + ghost rows degree-0
+        k = len(seg_dst)
+        col_l[p, :k] = np.where(
+            owned, seg_dst - lo,
+            block + np.searchsorted(ghosts, seg_dst) if len(ghosts)
+            else seg_dst - lo)
+        w_l[p, :k] = seg_w
+        g = len(ghosts)
+        ghost_ids[p, :g] = ghosts
+        n_ghosts[p] = g
+        n_local_edges[p] = k
+        if g:
+            owner = ghosts // block
+            for o in np.unique(owner):
+                idx = np.nonzero(owner == o)[0]
+                send_slot[p, o, :len(idx)] = block + idx
+                send_mask[p, o, :len(idx)] = True
+                recv_id[o, p, :len(idx)] = ghosts[idx] - o * block
+                recv_mask[o, p, :len(idx)] = True
+
+    return GraphPartition(
+        row_ptr=jnp.asarray(row_ptr_l), col_idx=jnp.asarray(col_l),
+        weights=jnp.asarray(w_l), ghost_ids=jnp.asarray(ghost_ids),
+        n_ghosts=jnp.asarray(n_ghosts),
+        n_local_edges=jnp.asarray(n_local_edges),
+        send_slot=jnp.asarray(send_slot), send_mask=jnp.asarray(send_mask),
+        recv_id=jnp.asarray(recv_id), recv_mask=jnp.asarray(recv_mask),
+        n_nodes=n, n_edges=m, n_parts=n_parts, block=block,
+        ghost_cap=ghost_cap, lane_cap=lane_cap, edge_cap=edge_cap)
+
+
+def suggest_partitions(graph: CSRGraph, *, vmem_bytes: int = 16 * 2 ** 20,
+                       state_arrays: int = 2, max_parts: int = 256) -> int:
+    """Smallest power-of-two shard count whose working set fits ``vmem_bytes``.
+
+    GraphCage's segment-size-to-cache rule reinterpreted for VMEM: a
+    shard's resident set is its CSR slice (row_ptr + col_idx + weights),
+    ``state_arrays`` node-payload arrays over the local node space, and one
+    edge-frontier lane set (ids + payload).  Ghosts are bounded above by
+    min(local edges, remote nodes) — the estimate errs conservative so the
+    suggested P fits without rebuilding.
+    """
+    n, m = graph.n_nodes, graph.n_edges
+    p = 1
+    while p < max_parts:
+        b = -(-n // p)
+        m_p = -(-m // p)
+        ghost = min(m_p, max(n - b, 0))
+        local = b + ghost
+        bytes_p = ((local + 1) * 4          # row_ptr slice
+                   + m_p * 8                # col_idx + weights
+                   + local * 4 * state_arrays
+                   + m_p * 8)               # expansion lanes (ids + payload)
+        if bytes_p <= vmem_bytes:
+            break
+        p *= 2
+    return p

@@ -35,3 +35,23 @@ def make_iru_mesh(n_partitions: int = 4):
     d = max(k for k in range(1, min(n_partitions, len(devices)) + 1)
             if n_partitions % k == 0)
     return jax.sharding.Mesh(np.asarray(devices[:d]), ("part",))
+
+
+def make_graph_mesh(n_parts: int):
+    """1-D mesh for the edge-partitioned frontier pipeline.
+
+    One graph shard per device over the ``gpart`` axis
+    (``dist.graph_partition``), so exactly ``n_parts`` devices are
+    required — the partition's stacked [P, ...] arrays shard one row per
+    device and the boundary all-to-all runs over this axis.  On CPU, force
+    host devices with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    """
+    import numpy as np
+
+    devices = jax.devices()
+    if len(devices) < n_parts:
+        raise ValueError(
+            f"make_graph_mesh: need {n_parts} devices for {n_parts} graph "
+            f"shards, have {len(devices)} (set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n_parts} on CPU)")
+    return jax.sharding.Mesh(np.asarray(devices[:n_parts]), ("gpart",))

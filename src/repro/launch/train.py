@@ -90,8 +90,16 @@ def main() -> None:
         orig_append(rec)
         if rec["step"] % args.log_every == 0:
             dt = time.monotonic() - t0
+            extra = ""
+            dr = rec.get("moe_drop_rate")
+            if dr is not None and len(dr):
+                # per-layer drop rates from the planned dispatch's stats,
+                # threaded through the layer scan (moe_load_imbalance rides
+                # alongside in the supervisor history)
+                extra = (f" moe_drop {float(dr.mean()):.3f}"
+                         f"/max {float(dr.max()):.3f}")
             print(f"step {rec['step']:5d} loss {rec['loss']:.4f} "
-                  f"({rec['dt']*1e3:.0f} ms/step, {dt:.0f}s total)")
+                  f"({rec['dt']*1e3:.0f} ms/step, {dt:.0f}s total){extra}")
         logged["n"] += 1
 
     sup.history = type("L", (list,), {"append": lambda self, r: log_append(r)})()

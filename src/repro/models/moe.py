@@ -60,25 +60,36 @@ def init_moe(it: Initializer, d_model: int, moe: MoEConfig, ffn_type: str) -> No
 
 def moe_ffn(params: dict, x: jax.Array, moe: MoEConfig, ffn_type: str,
             dispatch: str | None = None, *, n_live: jax.Array | None = None,
-            mesh=None):
+            mesh=None, return_stats: bool = False):
     """x: (B, S, D) or (T, D). Routes through the configured dispatch engine
     and adds always-on shared experts (DeepSeek) when configured.
 
     ``n_live`` (live-token count, runtime operand) and ``mesh``
     (expert-parallel execution) require the planned ``iru_hash`` engine.
+    ``return_stats`` (also ``iru_hash``-only) appends the plan's
+    ``moe.stats.DispatchStats`` to the return — the per-layer observability
+    the transformer threads through its scan into training metrics.
     """
     dispatch = dispatch or moe.dispatch
     shape = x.shape
     xf = x.reshape(-1, shape[-1])
+    stats = None
     if dispatch == "iru_hash":
         if mesh is not None:
+            if return_stats:
+                raise ValueError(
+                    "return_stats is not supported with expert-parallel "
+                    "execution (mesh=) yet")
             y, aux = moe_hash_ep(params, xf, moe, ffn_type, mesh, n_live=n_live)
+        elif return_stats:
+            y, aux, stats = moe_hash(params, xf, moe, ffn_type, n_live=n_live,
+                                     return_stats=True)
         else:
             y, aux = moe_hash(params, xf, moe, ffn_type, n_live=n_live)
-    elif n_live is not None or mesh is not None:
+    elif n_live is not None or mesh is not None or return_stats:
         raise ValueError(
-            f"n_live/mesh need the planned engine (dispatch='iru_hash'), "
-            f"got dispatch={dispatch!r}")
+            f"n_live/mesh/return_stats need the planned engine "
+            f"(dispatch='iru_hash'), got dispatch={dispatch!r}")
     elif dispatch == "iru_sorted":
         y, aux = moe_sorted(params, xf, moe, ffn_type)
     elif dispatch == "dense":
@@ -91,4 +102,6 @@ def moe_ffn(params: dict, x: jax.Array, moe: MoEConfig, ffn_type: str,
         else:
             h = jax.nn.gelu(xf @ params["shared_wi"])
         y = y + h @ params["shared_wo"]
+    if return_stats:
+        return y.reshape(shape), aux, stats
     return y.reshape(shape), aux

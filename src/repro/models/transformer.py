@@ -171,8 +171,10 @@ def abstract_params(cfg: ModelConfig, pcfg: ParallelConfig):
 # ---------------------------------------------------------------------------
 
 def _run_layer(p: dict, x: jax.Array, ls: LayerSpec, cfg: ModelConfig,
-               pcfg: ParallelConfig, *, cache: dict | None, pos, enc_out):
+               pcfg: ParallelConfig, *, cache: dict | None, pos, enc_out,
+               want_stats: bool = False):
     aux = jnp.float32(0.0)
+    stats = None
     new_cache: dict = {}
     h = rms_norm(x, p["ln1"], cfg.norm_eps)
     if ls.kind == "attn":
@@ -212,31 +214,46 @@ def _run_layer(p: dict, x: jax.Array, ls: LayerSpec, cfg: ModelConfig,
     if ls.has_ffn:
         h = rms_norm(x, p["ln2"], cfg.norm_eps)
         if ls.is_moe:
-            y, a = moe_ffn(p["moe"], h, cfg.moe, cfg.ffn_type)
+            if want_stats and cfg.moe.dispatch == "iru_hash":
+                y, a, stats = moe_ffn(p["moe"], h, cfg.moe, cfg.ffn_type,
+                                      return_stats=True)
+            else:
+                y, a = moe_ffn(p["moe"], h, cfg.moe, cfg.ffn_type)
             aux = aux + a
         else:
             y = ffn(p["ffn"], h, cfg.ffn_type)
         x = x + y
-    return constrain(x, ("batch", "seq", "embed")), new_cache, aux
+    return constrain(x, ("batch", "seq", "embed")), new_cache, aux, stats
 
 
 def _run_stage(stacked: dict, x: jax.Array, specs: tuple[LayerSpec, ...],
                cfg: ModelConfig, pcfg: ParallelConfig, *,
-               caches=None, pos=None, enc_out=None, remat: bool = False):
-    """Scan a stacked stage. Returns (x, new_caches_stacked, aux_sum)."""
+               caches=None, pos=None, enc_out=None, remat: bool = False,
+               want_stats: bool = False):
+    """Scan a stacked stage.
+
+    Returns ``(x, new_caches_stacked, aux_sum, stats)`` where ``stats`` is a
+    per-unit-layer tuple of scan-stacked ``DispatchStats`` ([rep, ...]
+    leaves, a registered pytree) for MoE layers under ``want_stats``, None
+    entries otherwise — None is static scan-output structure, so non-MoE
+    layers cost nothing.
+    """
 
     def unit_body(carry, inputs):
         xx = carry
         p, c = inputs
         aux = jnp.float32(0.0)
         ncs = []
+        sts = []
         for j, ls in enumerate(specs):
-            xx, nc, a = _run_layer(p[f"l{j}"], xx, ls, cfg, pcfg,
-                                   cache=None if c is None else c[j],
-                                   pos=pos, enc_out=enc_out)
+            xx, nc, a, st = _run_layer(p[f"l{j}"], xx, ls, cfg, pcfg,
+                                       cache=None if c is None else c[j],
+                                       pos=pos, enc_out=enc_out,
+                                       want_stats=want_stats)
             ncs.append(nc)
+            sts.append(st)
             aux = aux + a
-        return xx, (tuple(ncs), aux)
+        return xx, (tuple(ncs), aux, tuple(sts))
 
     body = unit_body
     if remat and pcfg.remat != "none":
@@ -244,8 +261,9 @@ def _run_stage(stacked: dict, x: jax.Array, specs: tuple[LayerSpec, ...],
 
     n_rep = jax.tree.leaves(stacked)[0].shape[0]
     cache_xs = caches if caches is not None else None
-    x, (new_caches, auxs) = mscan(body, x, (stacked, cache_xs), length=n_rep)
-    return x, new_caches, jnp.sum(auxs)
+    x, (new_caches, auxs, stats) = mscan(body, x, (stacked, cache_xs),
+                                         length=n_rep)
+    return x, new_caches, jnp.sum(auxs), stats
 
 
 # ---------------------------------------------------------------------------
@@ -296,19 +314,31 @@ def encode(params: dict, cfg: ModelConfig, pcfg: ParallelConfig, frames: jax.Arr
 # ---------------------------------------------------------------------------
 
 def forward_train(params: dict, cfg: ModelConfig, pcfg: ParallelConfig,
-                  batch: dict) -> tuple[jax.Array, jax.Array]:
-    """Full-sequence causal logits. Returns (logits fp32, aux_loss)."""
+                  batch: dict, *, return_stats: bool = False):
+    """Full-sequence causal logits. Returns (logits fp32, aux_loss), plus a
+    flat per-MoE-layer list of scan-stacked ``DispatchStats`` when
+    ``return_stats`` (planned ``iru_hash`` dispatch only; empty list
+    otherwise) — the observability feed ``train.trainer`` reduces into
+    ``moe_drop_rate`` metrics."""
+    want_stats = (return_stats and cfg.moe is not None
+                  and cfg.moe.dispatch == "iru_hash")
     x = _embed_inputs(params, cfg, batch)
     enc_out = None
     if cfg.encoder_layers:
         enc_out = encode(params, cfg, pcfg, batch["frames"], remat=pcfg.remat == "full")
     aux = jnp.float32(0.0)
+    all_stats = []
     for si, (rep, specs) in enumerate(stage_plan(cfg)):
-        x, _, a = _run_stage(params["dec"][f"stage{si}"], x, specs, cfg, pcfg,
-                             enc_out=enc_out, remat=pcfg.remat == "full")
+        x, _, a, stats = _run_stage(params["dec"][f"stage{si}"], x, specs,
+                                    cfg, pcfg, enc_out=enc_out,
+                                    remat=pcfg.remat == "full",
+                                    want_stats=want_stats)
         aux = aux + a
+        all_stats.extend(st for st in stats if st is not None)
     x = rms_norm(x, params["norm"], cfg.norm_eps)
     lg = embedding.logits(params["embed"], x, params.get("head"))
+    if return_stats:
+        return lg, aux, all_stats
     return lg, aux
 
 
@@ -402,8 +432,8 @@ def decode_step(params: dict, cfg: ModelConfig, pcfg: ParallelConfig,
     x = embedding.embed(params["embed"], tokens, iru=False)
     new_caches = []
     for si, (rep, specs) in enumerate(stage_plan(cfg)):
-        x, nc, _ = _run_stage(params["dec"][f"stage{si}"], x, specs, cfg, pcfg,
-                              caches=cache[si], pos=pos)
+        x, nc, _, _ = _run_stage(params["dec"][f"stage{si}"], x, specs, cfg,
+                                 pcfg, caches=cache[si], pos=pos)
         new_caches.append(nc)
     x = rms_norm(x, params["norm"], cfg.norm_eps)
     lg = embedding.logits(params["embed"], x, params.get("head"))
@@ -420,8 +450,9 @@ def prefill(params: dict, cfg: ModelConfig, pcfg: ParallelConfig,
     pos = jnp.int32(0)
     new_caches = []
     for si, (rep, specs) in enumerate(stage_plan(cfg)):
-        x, nc, _ = _run_stage(params["dec"][f"stage{si}"], x, specs, cfg, pcfg,
-                              caches=cache[si], pos=pos, enc_out=enc_out)
+        x, nc, _, _ = _run_stage(params["dec"][f"stage{si}"], x, specs, cfg,
+                                 pcfg, caches=cache[si], pos=pos,
+                                 enc_out=enc_out)
         new_caches.append(nc)
     x = rms_norm(x[:, -1:], params["norm"], cfg.norm_eps)
     lg = embedding.logits(params["embed"], x, params.get("head"))

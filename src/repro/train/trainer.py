@@ -78,12 +78,44 @@ def _split_batch(batch: dict, n: int) -> dict:
     return jax.tree.map(f, batch)
 
 
+def _moe_metrics(stats) -> dict:
+    """Reduce per-layer ``DispatchStats`` into flat metric arrays.
+
+    ``stats`` is ``forward_train``'s list of scan-stacked stats (leaves
+    [rep, ...]); the result concatenates layers in stack order:
+    ``moe_drop_rate`` f32[n_moe_layers] and ``moe_load_imbalance``
+    (max/mean expert load) f32[n_moe_layers].
+    """
+    if not stats:
+        return {}
+    drop = jnp.concatenate(
+        [jnp.atleast_1d(s.drop_rate) for s in stats]).astype(jnp.float32)
+
+    def imb(s):
+        load = s.expert_load.astype(jnp.float32)
+        return jnp.atleast_1d(
+            jnp.max(load, axis=-1) / jnp.maximum(jnp.mean(load, axis=-1), 1e-9))
+
+    return {"moe_drop_rate": drop,
+            "moe_load_imbalance": jnp.concatenate([imb(s) for s in stats])}
+
+
 def make_loss_fn(cfg: ModelConfig, pcfg: ParallelConfig, tc: TrainConfig) -> Callable:
+    # the planned engine's stats ride the forward pass for free (its plan
+    # already computes them); other engines log nothing
+    collect = cfg.moe is not None and cfg.moe.dispatch == "iru_hash"
+
     def loss_fn(params, mb: dict):
-        logits, aux = tfm.forward_train(params, cfg, pcfg, mb)
+        if collect:
+            logits, aux, stats = tfm.forward_train(params, cfg, pcfg, mb,
+                                                   return_stats=True)
+            moem = _moe_metrics(stats)
+        else:
+            logits, aux = tfm.forward_train(params, cfg, pcfg, mb)
+            moem = {}
         loss = softmax_xent(logits, mb["labels"], z_loss=tc.z_loss,
                             vocab_real=cfg.vocab_size)
-        return loss + tc.aux_weight * aux, (loss, aux)
+        return loss + tc.aux_weight * aux, (loss, aux, moem)
 
     return loss_fn
 
@@ -97,21 +129,22 @@ def make_train_step(cfg: ModelConfig, pcfg: ParallelConfig, tc: TrainConfig) -> 
         params = state["params"]
 
         if n_mb == 1:
-            (total, (loss, aux)), grads = grad_fn(params, batch)
+            (total, (loss, aux, moem)), grads = grad_fn(params, batch)
         else:
             mbs = _split_batch(batch, n_mb)
 
             def mb_body(carry, mb):
                 acc, lsum, asum = carry
-                (tot, (l, a)), g = grad_fn(params, mb)
+                (tot, (l, a, mm)), g = grad_fn(params, mb)
                 acc = jax.tree.map(lambda x, y: x + y.astype(jnp.float32), acc, g)
-                return (acc, lsum + l, asum + a), None
+                return (acc, lsum + l, asum + a), mm
 
             zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-            (gacc, lsum, asum), _ = mscan(
+            (gacc, lsum, asum), mstack = mscan(
                 mb_body, (zeros, jnp.float32(0), jnp.float32(0)), mbs)
             grads = jax.tree.map(lambda g: g / n_mb, gacc)
             loss, aux = lsum / n_mb, asum / n_mb
+            moem = jax.tree.map(lambda x: jnp.mean(x, axis=0), mstack)
 
         if tc.grad_compression == "int8_ef":
             from repro.dist.collectives import compress_grads_int8_ef
@@ -130,6 +163,7 @@ def make_train_step(cfg: ModelConfig, pcfg: ParallelConfig, tc: TrainConfig) -> 
             "grad_norm": global_norm(grads),
             "lr_scale": lr_scale,
         }
+        metrics.update(moem)  # moe_drop_rate / moe_load_imbalance when MoE
         return new_state, metrics
 
     return train_step

@@ -98,6 +98,43 @@ def test_int8_allreduce_shardmap():
     assert "OK" in out
 
 
+def test_int8_allreduce_multirow_shards():
+    """Shards wider than one row per device: exact local partial sum, then
+    one int8 payload per device (regression: used to crash in an opaque
+    reshape inside the shard_map body)."""
+    out = run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.dist.collectives import allreduce_int8
+        mesh = jax.make_mesh((8,), ("data",))
+        x = jnp.arange(24 * 16, dtype=jnp.float32).reshape(24, 16) / 7.0
+        got = allreduce_int8(x, mesh, "data")  # 3 rows per device
+        expect = np.asarray(x).sum(0)
+        rel = np.abs(np.asarray(got) - expect) / np.maximum(np.abs(expect), 1)
+        assert rel.max() < 0.02, rel.max()
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_int8_allreduce_indivisible_raises():
+    """A leading dim that does not divide over the axis raises a loud
+    ValueError naming the shape, before any tracing."""
+    out = run_py("""
+        import jax, jax.numpy as jnp
+        from repro.dist.collectives import allreduce_int8
+        mesh = jax.make_mesh((8,), ("data",))
+        x = jnp.zeros((12, 4), jnp.float32)
+        try:
+            allreduce_int8(x, mesh, "data")
+        except ValueError as e:
+            assert "(12, 4)" in str(e) and "'data'" in str(e), e
+            print("OK raised")
+        else:
+            raise AssertionError("expected ValueError for 12 rows / 8 devices")
+    """)
+    assert "OK raised" in out
+
+
 def test_dryrun_single_cell_machinery():
     """The dry-run driver end-to-end on the smallest cell (512 devices)."""
     env = dict(os.environ)

@@ -1,0 +1,111 @@
+"""Property-based tests (hypothesis) for graph partitioning.
+
+The invariants, over ANY random edge list and ANY shard count:
+
+  * partitioning is a pure relabeling — mapping each shard's local edge
+    list back to global vertex ids recovers the original edge multiset
+    exactly (sources, destinations AND weights), with each edge on the
+    shard that owns its source;
+  * the send/recv boundary maps are transposes of each other, so a value
+    gathered from shard p's ghost slot for owner o lands on exactly the
+    owner-local vertex ``recv_id[o, p, lane]``;
+  * a single-shard partition run through the partitioned BFS wrapper is
+    bit-identical to the plain pipeline (the P=1 degenerate case keeps
+    the whole exchange machinery out of the loop).
+
+Runs where hypothesis is installed (CI installs it; the fixed-graph sweeps
+in test_graph_partition.py cover environments without it).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="hypothesis not installed in this environment")
+from hypothesis import given, settings, strategies as st
+
+from repro.apps import bfs_pipeline
+from repro.dist.graph_partition import bfs_partitioned
+from repro.graphs.csr import from_edges, partition_csr
+
+graph_strategy = st.tuples(
+    st.integers(min_value=1, max_value=40),           # n_nodes
+    st.integers(min_value=0, max_value=160),          # n_edges (pre-dedup)
+    st.integers(min_value=0, max_value=2**32 - 1),    # contents seed
+    st.integers(min_value=1, max_value=6))            # requested shards
+
+
+def _random_graph(n, m, seed):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    w = rng.uniform(0.5, 2.0, m).astype(np.float32)
+    return from_edges(src, dst, n, weights=w)
+
+
+def _edges_global(part, p):
+    B = part.block
+    rp = np.asarray(part.row_ptr[p])
+    ne = int(part.n_local_edges[p])
+    src_l = np.repeat(np.arange(part.local_nodes), np.diff(rp))
+    dst_l = np.asarray(part.col_idx[p])[:ne]
+    w = np.asarray(part.weights[p])[:ne]
+    ng = int(part.n_ghosts[p])
+    ghosts = np.asarray(part.ghost_ids[p])[:ng]
+    slot = np.clip(dst_l - B, 0, max(ng - 1, 0))
+    dst_g = np.where(dst_l < B, dst_l + p * B, ghosts[slot] if ng else 0)
+    return src_l + p * B, dst_g, w
+
+
+@settings(max_examples=40, deadline=None)
+@given(gp=graph_strategy)
+def test_partition_is_a_pure_relabeling(gp):
+    n, m, seed, p_req = gp
+    g = _random_graph(n, m, seed)
+    n_parts = min(p_req, g.n_nodes)
+    part = partition_csr(g, n_parts)
+    rp = np.asarray(g.row_ptr)
+    want = sorted(zip(
+        np.repeat(np.arange(g.n_nodes), np.diff(rp)).tolist(),
+        np.asarray(g.col_idx)[: g.n_edges].tolist(),
+        np.asarray(g.weights)[: g.n_edges].tolist()))
+    got = []
+    for p in range(n_parts):
+        src_g, dst_g, w = _edges_global(part, p)
+        assert (src_g // part.block == p).all()
+        got.extend(zip(src_g.tolist(), dst_g.tolist(), w.tolist()))
+    assert sorted(got) == want
+
+
+@settings(max_examples=40, deadline=None)
+@given(gp=graph_strategy)
+def test_boundary_maps_are_transposes(gp):
+    n, m, seed, p_req = gp
+    g = _random_graph(n, m, seed)
+    n_parts = min(p_req, g.n_nodes)
+    part = partition_csr(g, n_parts)
+    B = part.block
+    send_slot = np.asarray(part.send_slot)
+    send_mask = np.asarray(part.send_mask)
+    recv_id = np.asarray(part.recv_id)
+    recv_mask = np.asarray(part.recv_mask)
+    for p in range(n_parts):
+        ng = int(part.n_ghosts[p])
+        ghosts = np.asarray(part.ghost_ids[p])[:ng]
+        for o in range(n_parts):
+            np.testing.assert_array_equal(send_mask[p, o], recv_mask[o, p])
+            lanes = np.flatnonzero(send_mask[p, o])
+            if not len(lanes):
+                continue
+            gids = ghosts[send_slot[p, o, lanes] - B]
+            assert (gids // B == o).all()
+            np.testing.assert_array_equal(gids - o * B, recv_id[o, p, lanes])
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(min_value=1, max_value=24),
+       m=st.integers(min_value=0, max_value=96),
+       seed=st.integers(min_value=0, max_value=2**32 - 1))
+def test_single_shard_bfs_matches_plain_pipeline(n, m, seed):
+    g = _random_graph(n, m, seed)
+    ref = np.asarray(bfs_pipeline(g, 0))
+    np.testing.assert_array_equal(bfs_partitioned(g, 0, n_parts=1), ref)
