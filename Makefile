@@ -6,7 +6,8 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test test-ci test-fast bench bench-quick bench-iru bench-iru-quick \
 	bench-apps-quick bench-serving bench-ragged bench-moe bench-dist \
-	smoke-pipeline smoke-graph-serving smoke-moe smoke-dist
+	smoke-pipeline smoke-graph-serving smoke-serving-fused smoke-moe \
+	smoke-dist
 
 test:
 	$(PY) -m pytest -x -q
@@ -53,7 +54,15 @@ smoke-pipeline:
 smoke-graph-serving:
 	$(PY) -m benchmarks.graph_serving_smoke
 
-# refresh only the multi-tenant serving rows of BENCH_iru.json
+# the fused tagged-lane serving contract: one mixed-family tick compiles at
+# most n_buckets step executables TOTAL, plus a 4-forced-device
+# partitioned-serving parity check on a composed
+# partition_csr(tile_csr(g, Q), 4) view — the CI fused-serving smoke
+smoke-serving-fused:
+	$(PY) -m benchmarks.graph_serving_smoke --fused
+
+# refresh only the multi-tenant serving rows of BENCH_iru.json (includes
+# the fused-vs-split and ragged-vs-padded serving ratios)
 bench-serving:
 	$(PY) -m benchmarks.iru_throughput --serving-only
 

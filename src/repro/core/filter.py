@@ -17,19 +17,24 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
-FilterOp = Literal["add", "min", "max"]
+FilterOp = Literal["add", "min", "max", "tagged"]
 
 def _merge_init(op: str, dtype) -> jax.Array:
     """Neutral element of a merge op at a payload dtype (inert lanes).
 
     Integer payloads (BFS depths, edge counts) take the dtype extremum —
     ``float('inf')`` does not convert — and ``iinfo.min``/``max`` are exact
-    for signed and unsigned dtypes alike.
+    for signed and unsigned dtypes alike.  ``"tagged"`` lanes default to the
+    ``min`` identity: every sentinel/padding index carries tag False (the
+    min family) by the tag-table contract, so the min identity is the one
+    inert lanes must hold.
     """
     if op == "add":
         return jnp.zeros((), dtype)
-    if op not in ("min", "max"):
+    if op not in ("min", "max", "tagged"):
         raise ValueError(f"unknown filter op {op!r}")
+    if op == "tagged":
+        op = "min"
     if jnp.issubdtype(dtype, jnp.integer):
         info = jnp.iinfo(dtype)
         return jnp.array(info.max if op == "min" else info.min, dtype)
@@ -55,6 +60,7 @@ def merge_sorted(
     values: jax.Array,
     op: FilterOp = "add",
     active: jax.Array | None = None,
+    tags: jax.Array | None = None,
 ):
     """Merge duplicate adjacent indices.
 
@@ -63,11 +69,32 @@ def merge_sorted(
     (meaningful on survivor lanes), and ``survivor_mask`` marks exactly one
     lane per unique index (the first of each run).  Matches the paper's
     ``load_iru`` contract: merged-out lanes return ``False``.
+
+    ``op="tagged"`` is the fused-family datapath: ``tags`` marks each lane's
+    merge family (False = min, True = add).  Equal indices always share a
+    tag — the tag is a function of the index — so every run is uniform-tag
+    and the run/segment structure is tag-independent; only the payload
+    reduction selects per tag (both reductions computed, per-lane select).
     """
     n = sorted_indices.shape[0]
     first = run_starts(sorted_indices, active)
     segs = jnp.cumsum(first.astype(jnp.int32)) - 1
     vals = values
+    if op == "tagged":
+        if tags is None:
+            raise ValueError("op='tagged' requires per-lane tags")
+        tlane = tags.reshape(tags.shape + (1,) * (values.ndim - 1))
+        vmin, vadd = values, values
+        if active is not None:
+            lane = active.reshape(active.shape + (1,) * (values.ndim - 1))
+            vmin = jnp.where(lane, values, _merge_init("min", values.dtype))
+            vadd = jnp.where(lane, values, _merge_init("add", values.dtype))
+        minned = jax.ops.segment_min(vmin, segs, num_segments=n)
+        summed = jax.ops.segment_sum(vadd, segs, num_segments=n)
+        out = jnp.where(tlane, summed[segs], minned[segs])
+        if active is not None:
+            out = jnp.where(lane, out, values)
+        return out, first
     if active is not None:
         # lane mask broadcasts across trailing payload dims ([n] or [n, k])
         lane = active.reshape(active.shape + (1,) * (values.ndim - 1))

@@ -161,6 +161,7 @@ def iru_reorder(
     *,
     config: IRUConfig = IRUConfig(),
     n_live: jax.Array | None = None,
+    tag_table: jax.Array | None = None,
 ) -> IRUStream:
     """Reorder (and optionally merge) an irregular-access index stream.
 
@@ -172,8 +173,18 @@ def iru_reorder(
     ``hash_reorder_batched`` for the exact layout contract.  ``hash_ref``
     composes the same contract on the host (``n_live`` must be concrete
     there).
+
+    ``filter_op="tagged"`` fuses the min and add merge families into ONE
+    datapath: ``tag_table`` (a runtime bool operand of size ``max_index +
+    2``; True = the add family, sentinel/padding indices map to False) gives
+    every index its family and each duplicate group merges under its own
+    family's op.  The tag rides the data, not the executable — one compiled
+    reorder serves any family mix.  Sort and hash (batched/banked) engines
+    support it; ``hash_ref`` and the pallas twin raise.
     """
     indices = jnp.asarray(indices).astype(jnp.int32)
+    if (config.filter_op == "tagged") != (tag_table is not None):
+        raise ValueError("filter_op='tagged' and tag_table go together")
     n = indices.shape[0]
     if secondary is None:
         secondary = jnp.zeros((n,), jnp.float32)
@@ -187,15 +198,21 @@ def iru_reorder(
     sec_dtype = secondary.dtype
 
     if config.mode == "hash_ref":
+        if tag_table is not None:
+            raise NotImplementedError(
+                "the hash_ref numpy oracle models single-family merges; use "
+                "mode='sort' or 'hash' for the fused tagged datapath")
         oi, osec, opos, oact = _hash_ref_host(
             np.asarray(indices), np.asarray(secondary), config,
             n_live=None if n_live is None else int(n_live))
         stream = IRUStream(jnp.asarray(oi), jnp.asarray(osec),
                            jnp.asarray(opos), jnp.asarray(oact))
     elif config.window_elems is not None and n > config.window_elems:
-        stream = _windowed_reorder(indices, secondary, config, n_live)
+        stream = _windowed_reorder(indices, secondary, config, n_live,
+                                   tag_table)
     else:
-        stream = _reorder_window(indices, secondary, config, n_live)
+        stream = _reorder_window(indices, secondary, config, n_live,
+                                 tag_table)
 
     # explicit dtype postconditions through every engine (window bookkeeping
     # must stay int32; payloads — including 2-D — must keep their dtype)
@@ -207,10 +224,11 @@ def iru_reorder(
 def _reorder_window(
     indices: jax.Array, secondary: jax.Array, config: IRUConfig,
     n_live: jax.Array | None = None,
+    tag_table: jax.Array | None = None,
 ) -> IRUStream:
     """One window (or the whole stream) through the configured jnp engine."""
     if config.mode == "sort":
-        stream = _sort_reorder(indices, secondary, config, n_live)
+        stream = _sort_reorder(indices, secondary, config, n_live, tag_table)
     elif config.mode == "hash":
         from repro.kernels.iru_reorder import ops as hash_ops  # local: avoid cycle
 
@@ -228,6 +246,7 @@ def _reorder_window(
             round_cap=config.round_cap,
             bank_map=config.bank_map,
             n_live=n_live,
+            tag_table=tag_table,
         )
     else:
         raise ValueError(f"unknown IRU mode {config.mode!r}")
@@ -247,6 +266,7 @@ def _reorder_window(
 def _windowed_reorder(
     indices: jax.Array, secondary: jax.Array, config: IRUConfig,
     n_live: jax.Array | None = None,
+    tag_table: jax.Array | None = None,
 ) -> IRUStream:
     """Bounded-lookahead streaming: independent windows, concatenated.
 
@@ -278,7 +298,7 @@ def _windowed_reorder(
             live_w > 0,
             lambda _: (lambda s: (s.indices, s.secondary, s.positions,
                                   s.active))(
-                _reorder_window(idx_w, sec_w, sub, live_w)),
+                _reorder_window(idx_w, sec_w, sub, live_w, tag_table)),
             lambda _: (idx_w, sec_w, jnp.arange(wlen, dtype=jnp.int32),
                        jnp.zeros((wlen,), jnp.bool_)),
             None)
@@ -289,7 +309,7 @@ def _windowed_reorder(
         def body(xs):
             idx_w, sec_w, off = xs
             if n_live is None:
-                s = _reorder_window(idx_w, sec_w, sub, None)
+                s = _reorder_window(idx_w, sec_w, sub, None, tag_table)
                 return s.indices, s.secondary, s.positions + off, s.active
             live_w = jnp.clip(jnp.asarray(n_live, jnp.int32) - off, 0, w)
             oi, osec, opos, oact = ragged_window(idx_w, sec_w, live_w)
@@ -306,7 +326,7 @@ def _windowed_reorder(
     if n_full < n:
         if n_live is None:
             s = _reorder_window(indices[n_full:], secondary[n_full:], sub,
-                                None)
+                                None, tag_table)
             tail = (s.indices, s.secondary, s.positions, s.active)
         else:
             live_t = jnp.clip(jnp.asarray(n_live, jnp.int32)
@@ -403,7 +423,8 @@ def reorder_frontier(
 
 
 def _sort_reorder(indices: jax.Array, secondary: jax.Array, cfg: IRUConfig,
-                  n_live: jax.Array | None = None) -> IRUStream:
+                  n_live: jax.Array | None = None,
+                  tag_table: jax.Array | None = None) -> IRUStream:
     # Stable sort on the index value: groups equal memory blocks AND makes
     # duplicate indices adjacent for the merge stage.  (block id is monotone
     # in the index, so sorting by index implies sorting by block.)
@@ -426,8 +447,13 @@ def _sort_reorder(indices: jax.Array, secondary: jax.Array, cfg: IRUConfig,
     if cfg.filter_op is None:
         active = (jnp.ones((n,), jnp.bool_) if live_s is None else live_s)
         return IRUStream(idx, sec, pos, active)
+    # fused-family tags re-derive from the permuted index frame: idx holds
+    # the REAL original values even on dead lanes (only the sort key was
+    # sentinel-swapped), so every lane's lookup stays in table range
+    tags = (None if tag_table is None
+            else tag_table[jnp.clip(idx, 0, tag_table.shape[0] - 1)])
     merged, survivors = filt.merge_sorted(idx, sec, cfg.filter_op,
-                                          active=live_s)
+                                          active=live_s, tags=tags)
     return IRUStream(idx, merged, pos, survivors)
 
 

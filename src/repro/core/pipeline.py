@@ -77,11 +77,18 @@ State = Any  # pytree of arrays (dict); app-defined
 
 
 def _merge_identity(op: str, dtype) -> jax.Array:
-    """Neutral element of a merge op at a payload dtype (inert lanes)."""
+    """Neutral element of a merge op at a payload dtype (inert lanes).
+
+    ``"tagged"`` takes the min identity: by the tag-table contract every
+    sentinel/padding index carries tag False (the min family), so inert
+    lanes always land in min territory.
+    """
     if op == "add":
         return jnp.zeros((), dtype)
-    if op not in ("min", "max"):
+    if op not in ("min", "max", "tagged"):
         raise ValueError(f"unknown merge op {op!r}")
+    if op == "tagged":
+        op = "min"
     if jnp.issubdtype(dtype, jnp.integer):
         info = jnp.iinfo(dtype)
         # iinfo.min is exact for signed AND unsigned dtypes (0 for uintN —
@@ -91,9 +98,25 @@ def _merge_identity(op: str, dtype) -> jax.Array:
 
 
 def _scatter(target: jax.Array, idx: jax.Array, val: jax.Array,
-             act: jax.Array, op: str) -> jax.Array:
-    """Merged scatter: inactive lanes retarget out of range and drop."""
+             act: jax.Array, op: str,
+             tags: Optional[jax.Array] = None) -> jax.Array:
+    """Merged scatter: inactive lanes retarget out of range and drop.
+
+    ``op="tagged"`` is the fused-family scatter — each lane folds under its
+    family (``tags``: False = min, True = add).  Min and add destinations
+    are disjoint (a destination index has exactly one family), so the two
+    drop-scatters compose without interference and each family's update
+    stream is identical to what its solo scatter would apply.
+    """
     dest = jnp.where(act, idx, target.shape[0])
+    if op == "tagged":
+        if tags is None:
+            raise ValueError("op='tagged' requires per-lane tags")
+        oob = jnp.int32(target.shape[0])
+        d_min = jnp.where(tags, oob, dest)
+        d_add = jnp.where(tags, dest, oob)
+        return target.at[d_min].min(val, mode="drop").at[d_add].add(
+            val, mode="drop")
     if op == "add":
         return target.at[dest].add(val, mode="drop")
     if op == "min":
@@ -189,15 +212,38 @@ def frontier_step(
     all-to-all) before the app commits the superstep; single-device
     execution passes ``None`` and is bit-identical to the historical step.
 
+    Apps with ``filter_op == "tagged"`` (the fused min+add datapath) must
+    declare a ``tag_table`` rule; the table is built ONCE per step and rides
+    the reorder engines as a lookup operand — lane tags re-derive from each
+    engine frame's own index array, so the tag is always a pure function of
+    the destination index and every duplicate run is uniform-tag.
+
     Returns ``(state, mask, idx, act, real, n_edges, overflow)``.
     """
     n = g.n_nodes
+    tag_tab = None
+    if app.filter_op == "tagged":
+        if app.tag_table is None:
+            raise ValueError(
+                f"app {app.name!r} has filter_op='tagged' but no tag_table")
+        tag_tab = app.tag_table(state, g)
     nodes = frontier_from_mask(mask, size=f_cap)
     ef = expand_frontier(g, nodes, edge_capacity=e_cap, gather=gather,
                          with_weights=app.needs_weights)
     vals = app.candidate(state, g, ef)
     ident = _merge_identity(app.filter_op, vals.dtype)
-    vals = jnp.where(ef.valid, vals, ident)
+    if tag_tab is None:
+        vals = jnp.where(ef.valid, vals, ident)
+    else:
+        # per-lane identity: dead lanes in the ADD family must carry the
+        # add identity (0), not +inf — their family's fold would otherwise
+        # poison the destination through the drop-protected scatter of an
+        # overflowed engine round.  Dead lanes with the sentinel index n
+        # map to tag False and take the min identity as before.
+        lane_tag = tag_tab[jnp.clip(ef.dsts, 0, tag_tab.shape[0] - 1)]
+        ident_add = _merge_identity("add", vals.dtype)
+        vals = jnp.where(ef.valid, vals,
+                         jnp.where(lane_tag, ident_add, ident))
     # the expansion already counted its live lanes (clamped to the
     # bucket) — no O(capacity) reduction to recover it
     n_edges = ef.n_valid
@@ -212,7 +258,8 @@ def frontier_step(
         # lanes: sorts/scans/rounds see the live prefix only, and the
         # pads come back inactive without ever entering a hash set.
         stream = iru_reorder(ef.dsts, vals, config=iru_config,
-                             n_live=ef.n_valid if ragged else None)
+                             n_live=ef.n_valid if ragged else None,
+                             tag_table=tag_tab)
         idx, svals = stream.indices, stream.secondary
         act = stream.active & (stream.indices < n)
         # expansion emits valid lanes front-packed, so a lane is a real
@@ -220,7 +267,10 @@ def frontier_step(
         # what the instrumented driver crops traces to (padding lanes
         # issue no memory access and must not count in the cost model)
         real = stream.positions < n_edges
-    new_target = _scatter(state[app.target], idx, svals, act, app.filter_op)
+    lane_tags = (None if tag_tab is None
+                 else tag_tab[jnp.clip(idx, 0, tag_tab.shape[0] - 1)])
+    new_target = _scatter(state[app.target], idx, svals, act, app.filter_op,
+                          tags=lane_tags)
     if exchange is not None:
         new_target = exchange(new_target, state)
     state, mask = app.update(state, new_target, g)
@@ -271,6 +321,13 @@ class FrontierApp:
       bookkeeping only.
     * ``needs_weights``: expansion co-gathers edge weights into
       ``ef.weights`` (through the same kernel pass on the pallas path).
+    * ``tag_table(state, graph)`` (required iff ``filter_op == "tagged"``)
+      -> bool[n_nodes + 1]: each destination index's merge family (False =
+      min, True = add; the trailing entry covers the padding sentinel and
+      must be False).  Built once per step and passed to the reorder
+      engines, which re-derive per-lane tags from their own index frames —
+      the tag is a pure function of the index, so equal indices always
+      share a family and duplicate runs stay uniform-tag.
     """
 
     name: str
@@ -283,6 +340,7 @@ class FrontierApp:
     result: Callable[[State], jax.Array]
     atomic: bool = True
     needs_weights: bool = False
+    tag_table: Optional[Callable[[State, CSRGraph], jax.Array]] = None
 
 
 class FrontierPipeline:

@@ -117,7 +117,7 @@ def _wire_bytes(codec: str, lanes: int, itemsize: int) -> int:
 
 
 def _boundary_exchange(new_target, ef_buf, *, send_slot, send_mask, recv_id,
-                       recv_mask, block, op, codec, payload):
+                       recv_mask, block, op, codec, payload, tags=None):
     """One all-to-all of boundary values; returns (merged target, new ef).
 
     Runs inside ``shard_map`` per shard.  ``new_target`` is the post-scatter
@@ -126,9 +126,37 @@ def _boundary_exchange(new_target, ef_buf, *, send_slot, send_mask, recv_id,
     Gather them along the static send map, codec-encode, all-to-all, decode,
     merge into the owned region along the static recv map, and reset the
     ghost region to the identity for the next superstep.
+
+    ``op="tagged"`` is the fused-family exchange: ``tags`` is this shard's
+    LOCAL tag table (bool[local_nodes], False = min family, True = add) —
+    the tag is a pure function of the composite id, so the sender's ghost
+    slot and the receiver's owned slot for the same id agree on the family.
+    Identities become per-slot (min lanes idle at +inf, add lanes at 0) and
+    the receive merge is the tagged scatter; only the ``exact`` codec
+    applies (the fused serving runtime's contract).
     """
     local_nodes = new_target.shape[0]
+    if (op == "tagged") != (tags is not None):
+        raise ValueError("op='tagged' and a local tag table go together")
+    if op == "tagged" and codec != "exact":
+        raise ValueError(
+            f"tagged boundary exchange supports only the exact codec, "
+            f"got {codec!r}")
     ident = _merge_identity(op, new_target.dtype)
+    if op == "tagged":
+        # per-slot identity vector: each slot idles at ITS family's identity
+        slot_ident = jnp.where(tags, _merge_identity("add", new_target.dtype),
+                               ident)
+        ss = jnp.minimum(send_slot, local_nodes - 1)
+        send = jnp.where(send_mask, new_target[ss], slot_ident[ss])
+        wire = jax.tree.map(
+            lambda a: jax.lax.all_to_all(a, AXIS, 0, 0, tiled=True),
+            {"v": send})
+        rid = recv_id.reshape(-1)
+        rtags = tags[jnp.clip(rid, 0, local_nodes - 1)]
+        owned = _scatter(new_target[:block], rid, wire["v"].reshape(-1),
+                         recv_mask.reshape(-1), op, tags=rtags)
+        return jnp.concatenate([owned, slot_ident[block:]]), ef_buf
     # masked lanes carry the identity so every codec ships a no-op for them
     send = jnp.where(send_mask,
                      new_target[jnp.minimum(send_slot, local_nodes - 1)],
@@ -456,9 +484,14 @@ class PartitionedFrontierPipeline:
 # -- one-call wrappers (mirror apps.bfs_pipeline & co.) ---------------------
 
 def _as_partition(graph, n_parts: Optional[int]) -> GraphPartition:
+    from repro.graphs.csr import PartitionedGraphView
+
+    if isinstance(graph, PartitionedGraphView):
+        return graph.part
     if isinstance(graph, GraphPartition):
         return graph
-    return partition_csr(graph, n_parts or 1)
+    part = partition_csr(graph, n_parts or 1)
+    return part.part if isinstance(part, PartitionedGraphView) else part
 
 
 def bfs_partitioned(graph, source: int = 0, *, n_parts: Optional[int] = None,

@@ -2,13 +2,18 @@
 from repro.graphs.csr import (
     CSRGraph,
     EdgeFrontier,
+    GraphView,
+    PartitionedGraphView,
     expand_frontier,
     from_edges,
     frontier_degree_sum,
     frontier_from_mask,
+    partition_csr,
+    tile_csr,
 )
 from repro.graphs.generators import DATASETS, make_dataset
 
-__all__ = ["CSRGraph", "EdgeFrontier", "expand_frontier", "from_edges",
-           "frontier_degree_sum", "frontier_from_mask", "DATASETS",
+__all__ = ["CSRGraph", "EdgeFrontier", "GraphView", "PartitionedGraphView",
+           "expand_frontier", "from_edges", "frontier_degree_sum",
+           "frontier_from_mask", "partition_csr", "tile_csr", "DATASETS",
            "make_dataset"]

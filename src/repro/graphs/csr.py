@@ -228,8 +228,57 @@ def expand_frontier(
                         jnp.minimum(total, jnp.int32(cap)))
 
 
-def tile_csr(graph: CSRGraph, copies: int) -> CSRGraph:
-    """``copies`` disjoint replicas of ``graph`` as ONE composite CSR.
+@dataclasses.dataclass
+class GraphView(CSRGraph):
+    """A composite ``CSRGraph`` carrying its id-space metadata.
+
+    The composition layer of the graph-view transforms: :func:`tile_csr`
+    emits ``GraphView`` instead of a bare ``CSRGraph``, so the fact that
+    composite node ``c`` decomposes as ``(tenant, local) = divmod(c,
+    base_nodes)`` travels WITH the arrays instead of being a side channel
+    the serving engine re-derives.  ``GraphView`` IS a ``CSRGraph`` (the
+    whole pipeline machinery — expansion, prediction, reorder, scatter —
+    applies unchanged); the metadata rides as static pytree leaves, so a
+    jitted step traced on a view retraces only when the tenant GEOMETRY
+    changes, never per call.
+
+    Closed under the view transforms: tiling a view multiplies
+    ``n_tenants`` (the base stays the ORIGINAL base graph), and
+    :func:`partition_csr` of a view yields a
+    :class:`PartitionedGraphView` — the sharded multi-tenant composite the
+    partitioned serving runtime consumes.
+    """
+
+    n_tenants: int = 1
+    base_nodes: int = 0
+    base_edges: int = 0
+
+    @property
+    def base(self) -> CSRGraph:
+        """The single-tenant base graph — exact prefix slices (tenant 0's
+        composite ids coincide with base ids, so no renumbering)."""
+        return CSRGraph(row_ptr=self.row_ptr[:self.base_nodes + 1],
+                        col_idx=self.col_idx[:self.base_edges],
+                        weights=self.weights[:self.base_edges])
+
+    def tenant_of(self, composite_ids):
+        """Tenant index of each composite node id (high 'bits' of the id)."""
+        return composite_ids // self.base_nodes
+
+    def local_of(self, composite_ids):
+        """Base-graph node id of each composite node id."""
+        return composite_ids % self.base_nodes
+
+
+jax.tree_util.register_dataclass(
+    GraphView,
+    data_fields=["row_ptr", "col_idx", "weights"],
+    meta_fields=["n_tenants", "base_nodes", "base_edges"],
+)
+
+
+def tile_csr(graph: CSRGraph, copies: int) -> GraphView:
+    """``copies`` disjoint replicas of ``graph`` as ONE composite CSR view.
 
     Replica ``q``'s node ``v`` becomes composite node ``q * n_nodes + v``;
     its edges shift likewise, so the replicas are disconnected components
@@ -242,16 +291,35 @@ def tile_csr(graph: CSRGraph, copies: int) -> CSRGraph:
     unchanged, and duplicate filtering / merging can only ever combine
     lanes WITHIN one query (composite ids never collide across replicas).
 
+    Returns a :class:`GraphView` carrying the tenant geometry; tiling a
+    view again composes (``n_tenants`` multiplies, the base stays the
+    original base graph).
+
     Memory is ``copies``x the base graph — the serving engine's slot count
     is the knob, exactly as a decode engine's batch slots size its KV cache.
     """
     if copies < 1:
         raise ValueError(f"copies must be >= 1, got {copies}")
     n, m = graph.n_nodes, graph.n_edges
-    if copies * max(n, 1) >= 2**31 or copies * max(m, 1) >= 2**31:
+    # composite ids pack the tenant index into the high bits of the node id
+    # (and edge offsets shift by q*m): validate copies*n / copies*m against
+    # the id dtype BEFORE building anything — a silent wraparound would
+    # alias tenants onto each other
+    info = np.iinfo(graph.col_idx.dtype)
+    if copies * max(int(n), 1) > info.max or copies * max(int(m), 1) > info.max:
         raise ValueError(
-            f"composite graph of {copies} x ({n} nodes, {m} edges) "
-            f"overflows int32 ids")
+            f"tile_csr: copies={copies} tenants over a base of n={n} nodes"
+            f" / {m} edges needs composite ids up to "
+            f"{max(copies * max(int(n), 1), copies * max(int(m), 1))}, which"
+            f" overflows the {info.dtype.name} id space "
+            f"(max {info.max}); int32 ids cap copies at "
+            f"{info.max // max(int(n), int(m), 1)} for this base graph")
+    if isinstance(graph, GraphView):
+        base_n, base_m = graph.base_nodes, graph.base_edges
+        tenants = graph.n_tenants * copies
+    else:
+        base_n, base_m = int(n), int(m)
+        tenants = copies
     q = jnp.arange(copies, dtype=jnp.int32)
     # composite row_ptr[c*n + v] = c*m + row_ptr[v]; interior replica
     # boundaries coincide ((c-1)*m + row_ptr[n] == c*m + row_ptr[0]), so
@@ -262,8 +330,9 @@ def tile_csr(graph: CSRGraph, copies: int) -> CSRGraph:
     ]).astype(jnp.int32)
     col_idx = (graph.col_idx[None, :] + q[:, None] * n).reshape(-1).astype(
         jnp.int32)
-    return CSRGraph(row_ptr=row_ptr, col_idx=col_idx,
-                    weights=jnp.tile(graph.weights, copies))
+    return GraphView(row_ptr=row_ptr, col_idx=col_idx,
+                     weights=jnp.tile(graph.weights, copies),
+                     n_tenants=tenants, base_nodes=base_n, base_edges=base_m)
 
 
 def from_edges(
@@ -365,8 +434,45 @@ jax.tree_util.register_dataclass(
 )
 
 
-def partition_csr(graph: CSRGraph, n_parts: int, *,
-                  edge_align: int = 8) -> GraphPartition:
+@dataclasses.dataclass(frozen=True)
+class PartitionedGraphView:
+    """A sharded multi-tenant composite: ``partition_csr(tile_csr(g, Q), P)``.
+
+    Host-side handle (NOT a pytree — the runtime feeds ``part`` to
+    ``shard_map`` and keeps ``view`` for id-space arithmetic): ``part`` is
+    the ordinary halo'd :class:`GraphPartition` of the composite id space —
+    boundary maps are built over composite ids, so ghost dedupe happens
+    per tenant for free (composite ids never collide across tenants) and
+    the send/recv maps stay transpose-consistent exactly as in the
+    single-tenant partition — and ``view`` carries the tenant geometry the
+    partition flattened away.
+    """
+
+    part: GraphPartition
+    view: GraphView
+
+    @property
+    def n_nodes(self) -> int:
+        return self.part.n_nodes
+
+    @property
+    def n_edges(self) -> int:
+        return self.part.n_edges
+
+    @property
+    def n_parts(self) -> int:
+        return self.part.n_parts
+
+    @property
+    def n_tenants(self) -> int:
+        return self.view.n_tenants
+
+    @property
+    def base_nodes(self) -> int:
+        return self.view.base_nodes
+
+
+def partition_csr(graph: CSRGraph, n_parts: int, *, edge_align: int = 8):
     """Block-partition ``graph`` into ``n_parts`` halo'd CSR slices.
 
     Every edge lands exactly once, on the shard owning its SOURCE vertex;
@@ -375,7 +481,20 @@ def partition_csr(graph: CSRGraph, n_parts: int, *,
     max ghosts, max boundary lanes per (shard, owner) pair) so the result
     stacks into the [P, ...] arrays ``shard_map`` wants.  Pure numpy — runs
     once per (graph, P) at partition time.
+
+    Closed over the view transforms: a :class:`GraphView` input (a
+    :func:`tile_csr` composite) returns a :class:`PartitionedGraphView` —
+    the same partition over the composite id space, plus the tenant
+    geometry — so ``partition_csr(tile_csr(g, Q), P)`` is the sharded
+    multi-tenant composite the partitioned serving runtime consumes.  A
+    plain ``CSRGraph`` returns the bare :class:`GraphPartition` as before.
     """
+    if isinstance(graph, GraphView):
+        base = CSRGraph(row_ptr=graph.row_ptr, col_idx=graph.col_idx,
+                        weights=graph.weights)
+        return PartitionedGraphView(
+            part=partition_csr(base, n_parts, edge_align=edge_align),
+            view=graph)
     n_parts = int(n_parts)
     if n_parts < 1:
         raise ValueError(f"partition_csr: n_parts must be >= 1, got {n_parts}")

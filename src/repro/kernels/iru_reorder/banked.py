@@ -43,6 +43,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.kernels.iru_reorder.batched import (
     _assemble,
+    _lane_tags,
     _reorder_presorted,
     _two_gen_emit,
     _two_gen_fits,
@@ -56,13 +57,19 @@ _INT32_MAX = np.int32(np.iinfo(np.int32).max)
 
 
 def _row_reorder(row, *, num_sets: int, slots: int,
-                 filter_op: Optional[str], round_cap: Optional[int]):
-    """Reorder one partition's (padded, set-sorted) bank row."""
+                 filter_op: Optional[str], round_cap: Optional[int],
+                 tag_table: Optional[jax.Array] = None):
+    """Reorder one partition's (padded, set-sorted) bank row.
+
+    Tags re-derive from the row's own index frame (``_lane_tags``): padding
+    lanes carry index ``-1``, which clips into the table but is never
+    consumed — padding never leads nor folds.
+    """
     I, V, Pos, S, valid = row
     filtered, band, key, acc = _reorder_presorted(
         I, V, Pos, S, valid,
         num_sets=num_sets, slots=slots, filter_op=filter_op,
-        round_cap=round_cap)
+        round_cap=round_cap, tags=_lane_tags(tag_table, I))
     oi, osec, opos, oact = _assemble(I, V, Pos, valid, filtered, band, key, acc)
     n_filt = jnp.sum(filtered.astype(jnp.int32))
     n_surv = jnp.sum((~filtered & valid).astype(jnp.int32))
@@ -89,8 +96,13 @@ def hash_reorder_banked(
     mesh=None,
     bank_map: str = "map",
     n_live: Optional[jax.Array] = None,
+    tag_table: Optional[jax.Array] = None,
 ):
     """Banked hash reorder; stream-identical to ``ref.hash_reorder_ref_banked``.
+
+    ``filter_op="tagged"`` + ``tag_table`` is the fused-family datapath of
+    ``hash_reorder_batched``: the (replicated) table rides into every bank
+    row and each duplicate group folds under its index's family.
 
     ``n_live`` (runtime operand) makes the stream ragged: the result is the
     banked oracle applied to the live prefix — partition fronts, then the
@@ -107,11 +119,14 @@ def hash_reorder_banked(
         raise ValueError(
             "mesh sharding requires n_partitions > 1 (the mesh shards bank "
             "rows; a single partition has nothing to shard)")
+    if (filter_op == "tagged") != (tag_table is not None):
+        raise ValueError("filter_op='tagged' and tag_table go together")
     if n_partitions <= 1:
         return hash_reorder_batched(
             indices, secondary, num_sets=num_sets, slots=slots,
             elem_bytes=elem_bytes, block_bytes=block_bytes,
-            filter_op=filter_op, round_cap=round_cap, n_live=n_live)
+            filter_op=filter_op, round_cap=round_cap, n_live=n_live,
+            tag_table=tag_table)
     if num_sets % n_partitions != 0:
         raise ValueError(
             f"num_sets={num_sets} must divide evenly into "
@@ -148,17 +163,19 @@ def hash_reorder_banked(
     if bank_map not in ("map", "vmap"):
         raise ValueError(f"bank_map must be 'map' or 'vmap', got {bank_map!r}")
 
-    row_fn = functools.partial(
-        _row_reorder, num_sets=num_sets, slots=slots, filter_op=filter_op,
-        round_cap=round_cap)
-
-    def rows_stage(rI, rV, rPos, rS, rValid):
+    def rows_stage(rI, rV, rPos, rS, rValid, tt=None):
         # "map": sequential rows, each partition's round loop trips its own
         # count.  "vmap": one batched program over rows — every partition
         # pays the max round count, but the work vectorizes across the bank
         # dimension (BENCH_iru.json hash_p4_vmap row tracks which wins).
+        # ``tt`` (the fused-family tag table) is unbatched: every row reads
+        # the same replicated table.
+        row_fn = functools.partial(
+            _row_reorder, num_sets=num_sets, slots=slots,
+            filter_op=filter_op, round_cap=round_cap, tag_table=tt)
         if bank_map == "vmap":
-            return jax.vmap(row_fn)((rI, rV, rPos, rS, rValid))
+            return jax.vmap(lambda row: row_fn(row))((rI, rV, rPos, rS,
+                                                      rValid))
         return jax.lax.map(row_fn, (rI, rV, rPos, rS, rValid))
 
     def banked_fn(_):
@@ -189,19 +206,27 @@ def hash_reorder_banked(
         rValid = jnp.zeros((nP, C), jnp.bool_).at[rc].set(
             jnp.ones((n,), jnp.bool_), mode="drop")
         if mesh is None:
-            oi, osec, opos, oact, m, f = rows_stage(rI, rV, rPos, rS, rValid)
+            oi, osec, opos, oact, m, f = rows_stage(rI, rV, rPos, rS, rValid,
+                                                    tag_table)
         else:
             from repro.launch.shardings import iru_partition_axis
 
             axis = iru_partition_axis(mesh)
+            # the tag table (when present) is replicated across the mesh —
+            # every shard's rows consult the same index → family map
+            extra = () if tag_table is None else (P(),)
             sharded = shard_map(
                 rows_stage, mesh=mesh,
-                in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis)),
+                in_specs=(P(axis), P(axis), P(axis), P(axis),
+                          P(axis)) + extra,
                 out_specs=(P(axis), P(axis), P(axis), P(axis),
                            P(axis), P(axis)),
                 check_rep=False,
             )
-            oi, osec, opos, oact, m, f = sharded(rI, rV, rPos, rS, rValid)
+            args = (rI, rV, rPos, rS, rValid)
+            if tag_table is not None:
+                args = args + (tag_table,)
+            oi, osec, opos, oact, m, f = sharded(*args)
         # partition-major combine: fronts [0, sum m), tails [n - sum f, n)
         front_off = jnp.cumsum(m) - m
         tail_off = jnp.cumsum(f) - f
@@ -242,7 +267,8 @@ def hash_reorder_banked(
         return hash_reorder_batched(
             indices, secondary, num_sets=num_sets, slots=slots,
             elem_bytes=elem_bytes, block_bytes=block_bytes,
-            filter_op=filter_op, round_cap=round_cap, n_live=n_live)
+            filter_op=filter_op, round_cap=round_cap, n_live=n_live,
+            tag_table=tag_table)
 
     if live is not None and _two_gen_fits(n, num_sets):
         # ragged fast path: when every live set stays within two occupancy
@@ -257,7 +283,7 @@ def hash_reorder_banked(
         ok, plan = _two_gen_plan(
             indices, secondary, live, sets, n_partitions=nP,
             num_sets=num_sets, slots=slots, filter_op=filter_op,
-            round_cap=round_cap)
+            round_cap=round_cap, tag_table=tag_table)
         branch = jnp.where(overflow, jnp.int32(0),
                            jnp.where(ok, jnp.int32(2), jnp.int32(1)))
         return jax.lax.switch(

@@ -79,9 +79,23 @@ def _seg_scatter(seg_id: jax.Array, values: jax.Array, n: int) -> jax.Array:
     return jnp.zeros((n,), values.dtype).at[seg_id].add(values)
 
 
-def _scatter_merge(V: jax.Array, tgt: jax.Array, filter_op: str) -> jax.Array:
+def _scatter_merge(V: jax.Array, tgt: jax.Array, filter_op: str,
+                   tags: Optional[jax.Array] = None) -> jax.Array:
     """Fold every lane of ``V`` into ``V[tgt]`` with the filter op
-    (out-of-range targets drop — the idiom for 'only filtered lanes fold')."""
+    (out-of-range targets drop — the idiom for 'only filtered lanes fold').
+
+    ``filter_op="tagged"`` is the fused-family datapath: ``tags`` marks each
+    lane's merge family (False = min, True = add).  A lane and its leader
+    always share an index, hence a tag, so the two per-family folds hit
+    disjoint target sets and compose as two drop-scatters.
+    """
+    if filter_op == "tagged":
+        if tags is None:
+            raise ValueError("filter_op='tagged' requires per-lane tags")
+        n = V.shape[0]
+        t_min = jnp.where(tags, jnp.int32(n), tgt)
+        t_add = jnp.where(tags, tgt, jnp.int32(n))
+        return V.at[t_min].min(V, mode="drop").at[t_add].add(V, mode="drop")
     if filter_op == "add":
         return V.at[tgt].add(V, mode="drop")
     if filter_op == "min":
@@ -89,6 +103,21 @@ def _scatter_merge(V: jax.Array, tgt: jax.Array, filter_op: str) -> jax.Array:
     if filter_op == "max":
         return V.at[tgt].max(V, mode="drop")
     raise ValueError(filter_op)
+
+
+def _lane_tags(tag_table: Optional[jax.Array],
+               I: jax.Array) -> Optional[jax.Array]:
+    """Per-lane family tags recomputed from an index frame.
+
+    The tag is a pure function of the index, so any permutation of the
+    stream can re-derive its lane tags from the (replicated) table instead
+    of threading a permuted tag array through every frame.  Out-of-range
+    lanes (sort sentinels, bank padding ``-1``) clip into the table; their
+    tag is never consumed — such lanes always scatter to the drop target.
+    """
+    if tag_table is None:
+        return None
+    return tag_table[jnp.clip(I, 0, tag_table.shape[0] - 1)]
 
 
 def _segment_fields(S: jax.Array):
@@ -175,7 +204,7 @@ def _keys_hash_filter(I, Pos, valid, seg_fields, psr, *, slots: int):
 
 
 def _keys_single_round(I, V, Pos, S, valid, seg_fields, *, slots: int,
-                       filter_op: str):
+                       filter_op: str, tags: Optional[jax.Array] = None):
     """Closed form for streams whose round bound collapses to one round
     (every live set's raw count fits in ``slots`` — the common case for
     sparse ragged frontiers, where most sets see a handful of elements).
@@ -206,7 +235,8 @@ def _keys_single_round(I, V, Pos, S, valid, seg_fields, *, slots: int,
     leader_of = jnp.zeros((n,), jnp.int32).at[o2].set(lead_pos[rid])
     first = jnp.zeros((n,), jnp.bool_).at[o2].set(run_new)
     filtered = valid & ~first
-    acc = _scatter_merge(V, jnp.where(filtered, leader_of, n), filter_op)
+    acc = _scatter_merge(V, jnp.where(filtered, leader_of, n), filter_op,
+                         tags)
     kept = _seg_scatter(seg_id, (~filtered & valid).astype(jnp.int32), n)
     flush_seg = (seg_len == slots) & (kept == slots)
     trig_pos = jnp.zeros((n,), jnp.int32).at[seg_id].max(Pos)
@@ -224,7 +254,8 @@ def _two_gen_fits(n: int, num_sets: int) -> bool:
 
 def _two_gen_plan(indices, secondary, live, sets, *, n_partitions: int,
                   num_sets: int, slots: int, filter_op: Optional[str],
-                  round_cap: Optional[int]):
+                  round_cap: Optional[int],
+                  tag_table: Optional[jax.Array] = None):
     """Closed-form analysis of a ragged stream under the *two-generation*
     specialization of the hash oracle, and the exactness guard for it.
 
@@ -311,7 +342,7 @@ def _two_gen_plan(indices, secondary, live, sets, *, n_partitions: int,
         leader_of = jnp.zeros((n,), i32).at[o].set(
             jnp.where(g2o, lead2[rid], lead1[rid]))
         acc = _scatter_merge(secondary, jnp.where(filtered, leader_of, n),
-                             filter_op)
+                             filter_op, _lane_tags(tag_table, indices))
     else:
         kept = live
         filtered = jnp.zeros((n,), jnp.bool_)
@@ -400,7 +431,8 @@ def _two_gen_emit(indices, secondary, plan):
     return out_idx, out_sec, out_pos, out_act
 
 
-def _merge_payloads(I, V, S, rank, round_of, filtered, filter_op: str):
+def _merge_payloads(I, V, S, rank, round_of, filtered, filter_op: str,
+                    tags: Optional[jax.Array] = None):
     """Fold each filtered element into the surviving leader of its
     (set, index, round) group — a segment reduction."""
     n = I.shape[0]
@@ -413,10 +445,12 @@ def _merge_payloads(I, V, S, rank, round_of, filtered, filter_op: str):
     g3 = jnp.cumsum(lead_new.astype(jnp.int32)) - 1
     lead_pos = _seg_scatter(g3, jnp.where(lead_new, o3, 0), n)
     leader_of = jnp.zeros((n,), jnp.int32).at[o3].set(lead_pos[g3])
-    return _scatter_merge(V, jnp.where(filtered, leader_of, n), filter_op)
+    return _scatter_merge(V, jnp.where(filtered, leader_of, n), filter_op,
+                          tags)
 
 
-def _keys_dense_merge(I, V, Pos, valid, filter_op: str):
+def _keys_dense_merge(I, V, Pos, valid, filter_op: str,
+                      tags: Optional[jax.Array] = None):
     """Dense fallback: one survivor per unique index, sorted by index value.
 
     The "infinite-patience" reorder of the sub-stream — what the sort engine
@@ -436,7 +470,8 @@ def _keys_dense_merge(I, V, Pos, valid, filter_op: str):
     leader_of = jnp.zeros((n,), jnp.int32).at[o2].set(lead_pos[rid])
     first = jnp.zeros((n,), jnp.bool_).at[o2].set(run_new)
     filtered = valid & ~first
-    acc = _scatter_merge(V, jnp.where(filtered, leader_of, n), filter_op)
+    acc = _scatter_merge(V, jnp.where(filtered, leader_of, n), filter_op,
+                         tags)
     band = jnp.full((n,), BAND_FLUSH)
     key = Ik
     # round_of is unused downstream for the dense path; return zeros
@@ -454,6 +489,7 @@ def _reorder_presorted(
     slots: int,
     filter_op: Optional[str],
     round_cap: Optional[int] = None,
+    tags: Optional[jax.Array] = None,
 ):
     """Round/merge decomposition over one set-major sorted (padded) stream.
 
@@ -485,13 +521,14 @@ def _reorder_presorted(
             psr = jnp.where(valid, psr, -1)
             filtered, band, key, round_of = _keys_hash_filter(
                 I, Pos, valid, seg_fields, psr, slots=slots)
-            acc = _merge_payloads(I, V, S, rank, round_of, filtered, filter_op)
+            acc = _merge_payloads(I, V, S, rank, round_of, filtered,
+                                  filter_op, tags)
             return filtered, band, key, acc
 
         def single_path(_):
             return _keys_single_round(
                 I, V, Pos, S, valid, seg_fields, slots=slots,
-                filter_op=filter_op)
+                filter_op=filter_op, tags=tags)
 
         # each full round consumes >= slots elements of its set, so the
         # per-set ceil(len / slots) bounds the trip count a priori; a bound
@@ -510,7 +547,8 @@ def _reorder_presorted(
             filtered, band, key, acc = jax.lax.switch(
                 branch,
                 [single_path, hash_path,
-                 lambda _: _keys_dense_merge(I, V, Pos, valid, filter_op)],
+                 lambda _: _keys_dense_merge(I, V, Pos, valid, filter_op,
+                                             tags)],
                 None)
     band = jnp.where(valid, band, BAND_PAD)
     # padding keys collapse to 0 so pads order purely by stream position —
@@ -549,7 +587,7 @@ def _assemble(I, V, Pos, valid, filtered, band, key, acc):
 
 
 def _dense_merge_flat(indices: jax.Array, secondary: jax.Array,
-                      filter_op: str):
+                      filter_op: str, tags: Optional[jax.Array] = None):
     """Whole-stream dense fallback, direct form (one argsort, no emission
     sorts): the output positions of ``dense_merge_ref`` are closed-form —
     survivors take their rank among survivors in (index, arrival) order,
@@ -565,7 +603,7 @@ def _dense_merge_flat(indices: jax.Array, secondary: jax.Array,
     first = jnp.zeros((n,), jnp.bool_).at[o].set(run_new)
     filtered = ~first
     acc = _scatter_merge(secondary, jnp.where(filtered, leader_of, n),
-                         filter_op)
+                         filter_op, tags)
     surv_rank = jnp.cumsum(run_new.astype(jnp.int32)) - 1    # per sorted pos
     pos_of = jnp.zeros((n,), jnp.int32).at[o].set(surv_rank)
     frank = jnp.cumsum(filtered.astype(jnp.int32)) - 1       # stream order
@@ -594,9 +632,17 @@ def hash_reorder_batched(
     filter_op: Optional[str] = None,
     round_cap: Optional[int] = None,
     n_live: Optional[jax.Array] = None,
+    tag_table: Optional[jax.Array] = None,
 ):
     """Batch-parallel hash reorder; stream-identical to ``hash_reorder_ref``
     (``ref.hash_reorder_ref_flat`` when ``round_cap`` is set).
+
+    ``filter_op="tagged"`` fuses the min and add merge families into one
+    pass: ``tag_table`` (a runtime bool operand of size ``max_index + 2``,
+    True = add) maps every index to its family, and each duplicate group
+    merges under its own family's op.  Binning, rounds, flush/drain layout
+    and dedup decisions are all tag-independent — equal indices share a tag
+    by construction, so only the payload folds consult it.
 
     ``n_live`` (a runtime operand, never a shape) makes the stream ragged:
     only the first ``n_live`` lanes are real.  The result is then the oracle
@@ -610,6 +656,8 @@ def hash_reorder_batched(
     Returns ``(out_idx, out_sec, out_pos, out_act)`` arrays.
     """
     indices = indices.astype(jnp.int32)
+    if (filter_op == "tagged") != (tag_table is not None):
+        raise ValueError("filter_op='tagged' and tag_table go together")
     n = indices.shape[0]
     epb = block_bytes // elem_bytes
     if n == 0:
@@ -639,7 +687,8 @@ def hash_reorder_batched(
             # padded streams decide the cap below, before paying the sort;
             # ragged streams decide inside the sorted layout where the
             # live-only segment lengths are already on hand
-            round_cap=(round_cap if live is not None else None))
+            round_cap=(round_cap if live is not None else None),
+            tags=_lane_tags(tag_table, I))
         return _assemble(I, V, Pos, valid, filtered, band, key, acc)
 
     if live is not None and _two_gen_fits(n, num_sets):
@@ -653,7 +702,7 @@ def hash_reorder_batched(
         ok, plan = _two_gen_plan(
             indices, secondary, live, sets, n_partitions=1,
             num_sets=num_sets, slots=slots, filter_op=filter_op,
-            round_cap=round_cap)
+            round_cap=round_cap, tag_table=tag_table)
         return jax.lax.cond(
             ok,
             lambda _: _two_gen_emit(indices, secondary, plan),
@@ -667,6 +716,7 @@ def hash_reorder_batched(
     r_ub = jnp.max((counts + slots - 1) // slots)
     return jax.lax.cond(
         r_ub > round_cap,
-        lambda _: _dense_merge_flat(indices, secondary, filter_op),
+        lambda _: _dense_merge_flat(indices, secondary, filter_op,
+                                    _lane_tags(tag_table, indices)),
         hash_fn,
         None)

@@ -61,12 +61,17 @@ def hash_reorder(
     mesh=None,
     bank_map: str = "map",
     n_live: Optional[jax.Array] = None,
+    tag_table: Optional[jax.Array] = None,
 ):
     """Paper-faithful O(n) bounded reorder. Returns an ``IRUStream``.
 
     ``n_live`` (runtime operand) selects ragged execution: the batched /
     banked engines operate on the live prefix only and emit the dead lanes
     as inactive filler — see ``hash_reorder_batched`` for the layout.
+
+    ``filter_op="tagged"`` + ``tag_table`` (runtime bool operand, True = the
+    add family) selects the fused-family merge: each duplicate group folds
+    under its index's family in one pass — a batched/banked-engine feature.
     """
     from repro.core.iru import IRUStream  # late import: core imports us lazily
 
@@ -89,6 +94,7 @@ def hash_reorder(
                 mesh=mesh,
                 bank_map=bank_map,
                 n_live=n_live,
+                tag_table=tag_table,
             )
         else:
             out = hash_reorder_batched(
@@ -101,8 +107,13 @@ def hash_reorder(
                 filter_op=filter_op,
                 round_cap=round_cap,
                 n_live=n_live,
+                tag_table=tag_table,
             )
     elif engine == "pallas":
+        if filter_op == "tagged":
+            raise NotImplementedError(
+                "the element-sequential pallas twin models single-family "
+                "merges; use engine='batched' for the fused tagged datapath")
         if secondary.ndim != 1:
             raise NotImplementedError(
                 "the pallas engine carries scalar payloads only; "

@@ -18,9 +18,18 @@ def segment_merge(
     chunk: int = 512,
     use_pallas: bool = True,
     interpret: Optional[bool] = None,
+    tags: Optional[jax.Array] = None,
 ):
-    """Merge duplicate adjacent indices; returns ``(merged, survivor_mask)``."""
+    """Merge duplicate adjacent indices; returns ``(merged, survivor_mask)``.
+
+    ``op="tagged"`` fuses the min and add merge families in one kernel pass:
+    ``tags`` marks each lane's family (False = min, True = add); equal
+    indices always share a tag, so runs are uniform-tag by construction.
+    """
+    if (op == "tagged") != (tags is not None):
+        raise ValueError("op='tagged' and tags go together")
     if not use_pallas:
-        return segment_merge_ref(sorted_indices, values, op)
-    return segment_merge_pallas(sorted_indices, values, op=op, chunk=chunk,
+        return segment_merge_ref(sorted_indices, values, op, tags=tags)
+    return segment_merge_pallas(sorted_indices, values, tags, op=op,
+                                chunk=chunk,
                                 interpret=resolve_interpret(interpret))

@@ -3,6 +3,11 @@
 ``merged`` carries the FULL segment reduction at every lane of the run (the
 kernel only guarantees survivor lanes; tests compare survivor lanes plus the
 mask).
+
+``op="tagged"`` is the fused-family datapath: ``tags`` marks each lane's
+merge family (False = min, True = add).  Equal indices share a tag by the
+tag-table contract, so every run is uniform-tag and only the payload
+reduction selects per tag.
 """
 from __future__ import annotations
 
@@ -12,6 +17,8 @@ import jax.numpy as jnp
 from repro.core.filter import merge_sorted
 
 
-def segment_merge_ref(sorted_indices: jax.Array, values: jax.Array, op: str = "add"):
-    merged, survivors = merge_sorted(sorted_indices.astype(jnp.int32), values, op)
+def segment_merge_ref(sorted_indices: jax.Array, values: jax.Array,
+                      op: str = "add", tags: jax.Array | None = None):
+    merged, survivors = merge_sorted(sorted_indices.astype(jnp.int32), values,
+                                     op, tags=tags)
     return merged, survivors

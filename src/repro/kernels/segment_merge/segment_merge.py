@@ -28,6 +28,9 @@ _IDENTITY = {
     "add": lambda dt: jnp.zeros((), dt),
     "min": lambda dt: jnp.asarray(jnp.iinfo(dt).max if jnp.issubdtype(dt, jnp.integer) else jnp.inf, dt),
     "max": lambda dt: jnp.asarray(jnp.iinfo(dt).min if jnp.issubdtype(dt, jnp.integer) else -jnp.inf, dt),
+    # tagged padding lanes carry tag 0 (the min family), so the min identity
+    # is the inert payload for them
+    "tagged": lambda dt: jnp.asarray(jnp.iinfo(dt).max if jnp.issubdtype(dt, jnp.integer) else jnp.inf, dt),
 }
 
 _OPS = {
@@ -68,15 +71,63 @@ def _kernel(idx_ref, prev_ref, val_ref, merged_ref, surv_ref, carry_idx, carry_v
     carry_val[0] = merged[0]
 
 
+def _kernel_tagged(idx_ref, prev_ref, val_ref, tag_ref, merged_ref, surv_ref,
+                   carry_idx, carry_val):
+    """Fused-family variant: the tag rides the data as a third input stream.
+
+    Every run is uniform-tag (the tag is a function of the index), so the
+    per-lane combine selects min or add by the RIGHT operand's tag — inside
+    a run both operands share it, across runs the result is discarded, and
+    the segmented scan stays associative exactly as in the single-op kernel.
+    The cross-chunk carry needs no tag slot: the match lane's own tag is the
+    carried run's tag.
+    """
+    g = pl.program_id(0)
+
+    def comb(a, b, t):
+        return jnp.where(t != 0, a + b, jnp.minimum(a, b))
+
+    idx = idx_ref[...]
+    val = val_ref[...]
+    prev = prev_ref[...]
+    tag = tag_ref[...]
+
+    rid = jnp.flip(idx)
+    rval = jnp.flip(val)
+    rtag = jnp.flip(tag)
+
+    has_carry = g > 0
+    cmatch = has_carry & (rid[0] == carry_idx[0])
+    rval = rval.at[0].set(
+        jnp.where(cmatch, comb(rval[0], carry_val[0], rtag[0]), rval[0]))
+
+    def seg_combine(left, right):
+        il, vl, _tl = left
+        ir, vr, tr = right
+        return ir, jnp.where(il == ir, comb(vl, vr, tr), vr), tr
+
+    _, scanned, _ = jax.lax.associative_scan(seg_combine, (rid, rval, rtag))
+    merged = jnp.flip(scanned)
+
+    merged_ref[...] = merged
+    surv_ref[...] = (idx != prev).astype(jnp.int32)
+
+    carry_idx[0] = idx[0]
+    carry_val[0] = merged[0]
+
+
 @functools.partial(jax.jit, static_argnames=("op", "chunk", "interpret"))
 def segment_merge_pallas(
     sorted_indices: jax.Array,
     values: jax.Array,
+    tags: jax.Array | None = None,
     *,
     op: str = "add",
     chunk: int = 512,
     interpret: bool = True,
 ):
+    if (op == "tagged") != (tags is not None):
+        raise ValueError("op='tagged' and tags go together")
     n = sorted_indices.shape[0]
     dt = values.dtype
     ident = _IDENTITY[op](dt)
@@ -88,14 +139,20 @@ def segment_merge_pallas(
     grid = m // chunk
     rev = lambda g: ((grid - 1 - g),)  # reverse-order chunk walk
 
+    if op == "tagged":
+        # padding lanes tag 0: the min family, matching the pad identity
+        tg = jnp.concatenate([tags.astype(jnp.int32),
+                              jnp.zeros((pad,), jnp.int32)])
+        kernel = _kernel_tagged
+        inputs = (idx, prev, val, tg)
+    else:
+        kernel = functools.partial(_kernel, op=op)
+        inputs = (idx, prev, val)
+
     merged, surv = pl.pallas_call(
-        functools.partial(_kernel, op=op),
+        kernel,
         grid=(grid,),
-        in_specs=[
-            pl.BlockSpec((chunk,), rev),
-            pl.BlockSpec((chunk,), rev),
-            pl.BlockSpec((chunk,), rev),
-        ],
+        in_specs=[pl.BlockSpec((chunk,), rev)] * len(inputs),
         out_specs=[
             pl.BlockSpec((chunk,), rev),
             pl.BlockSpec((chunk,), rev),
@@ -109,5 +166,5 @@ def segment_merge_pallas(
             pltpu.SMEM((1,), dt),
         ],
         interpret=interpret,
-    )(idx, prev, val)
+    )(*inputs)
     return merged[:n], surv[:n].astype(jnp.bool_)

@@ -405,6 +405,156 @@ def test_tile_csr_rejects_bad_copies(gk):
         tile_csr(gk, 2**31 // gk.n_nodes + 1)
 
 
+def test_tile_csr_overflow_error_names_geometry(gk):
+    """The query-id high-bit packing overflow must be loud and actionable:
+    the message names the requested copies, the base node count, and the id
+    dtype it overflows (regression: the old check silently wrapped when the
+    EDGE space overflowed before the node space)."""
+    bad = 2**31 // gk.n_edges + 1  # edge offsets overflow before node ids
+    assert bad * gk.n_nodes < 2**31  # node space alone would have passed
+    with pytest.raises(ValueError) as ei:
+        tile_csr(gk, bad)
+    msg = str(ei.value)
+    assert f"copies={bad}" in msg
+    assert f"n={gk.n_nodes}" in msg
+    assert "int32" in msg
+
+
+def test_composed_view_composition_metadata(gk):
+    """partition_csr(tile_csr(g, Q), P): closed transforms whose composite
+    carries the id-space metadata (tenant count, base geometry) through."""
+    from repro.graphs.csr import GraphView, PartitionedGraphView, partition_csr
+
+    Q = 3
+    view = tile_csr(gk, Q)
+    assert isinstance(view, GraphView)
+    assert view.n_tenants == Q and view.base_nodes == gk.n_nodes
+    np.testing.assert_array_equal(np.asarray(view.base.col_idx),
+                                  np.asarray(gk.col_idx))
+    retiled = tile_csr(view, 2)  # composition: tenants multiply
+    assert retiled.n_tenants == 2 * Q
+    assert retiled.base_nodes == gk.n_nodes
+    pview = partition_csr(view, 2)
+    assert isinstance(pview, PartitionedGraphView)
+    assert pview.n_parts == 2 and pview.n_tenants == Q
+    assert pview.base_nodes == gk.n_nodes and pview.n_nodes == view.n_nodes
+
+
+# ---------------------------------------------------------------------------
+# the fused tagged-lane datapath (min + add families in ONE dispatch)
+# ---------------------------------------------------------------------------
+
+def _fused_vs_split(g, queries_fn):
+    out = []
+    for fused in (True, False):
+        eng = GraphServingEngine(g, GraphServeConfig(
+            query_slots=4, capacity_policy=SMALL, fused=fused))
+        qs = queries_fn()
+        for q in qs:
+            eng.submit(q)
+        eng.run_to_completion(3000)
+        out.append((eng, qs))
+    return out
+
+
+@pytest.mark.parametrize("gname", ["gk", "gd"])
+def test_fused_matches_split_engine(gname, request):
+    """The fused tick's parity contract vs the split per-family engine on a
+    mixed min+add workload: min-family results bit-identical, add-family
+    allclose (exact here too — baseline mode preserves add-lane order)."""
+    g = request.getfixturevalue(gname)
+    (ef, fq), (es, sq) = _fused_vs_split(g, _mixed)
+    for a, b in zip(fq, sq):
+        assert a.done and b.done, (a.status, b.status)
+        if a.kind == "ppr":
+            np.testing.assert_allclose(a.result, b.result,
+                                       rtol=1e-6, atol=1e-7)
+        else:
+            np.testing.assert_array_equal(a.result, b.result)
+    _assert_parity(ef, fq)  # and min stays bit-identical to SOLO runs
+
+
+def test_fused_mixed_workload_compiles_n_buckets_total(gk):
+    """Acceptance: a mixed BFS+SSSP+PPR workload compiles at most n_buckets
+    step executables TOTAL — not per family — because both families share
+    the single tagged-lane runtime."""
+    pol = CapacityPolicy(n_buckets=3, min_capacity=512, growth=8)
+    eng = GraphServingEngine(gk, GraphServeConfig(
+        query_slots=4, capacity_policy=pol))
+    qs = _mixed()
+    for q in qs:
+        eng.submit(q)
+    eng.run_to_completion(2000)
+    _assert_parity(eng, qs)
+    assert list(eng._pipes) == ["fused"], list(eng._pipes)
+    total = sum(fn._cache_size() for fn in eng._pipes["fused"]._step_b)
+    assert total <= pol.n_buckets, (
+        f"{total} step executables for a mixed workload; the fused "
+        f"datapath allows at most n_buckets={pol.n_buckets} TOTAL")
+
+
+def test_fused_injected_overflow_quarantines_and_recovers(gk):
+    """Forced overflow under the fused datapath: a victim is evicted from
+    the SHARED tick (either family is eligible), co-tenants keep advancing,
+    and every query still lands bit-identical to its solo run."""
+    plan = QueryFaultPlan(overflow_at=(3,))
+    eng = GraphServingEngine(
+        gk, GraphServeConfig(query_slots=4, backoff_base_s=0.001,
+                             capacity_policy=SMALL),
+        fault_plan=plan)
+    qs = _mixed()
+    for q in qs:
+        eng.submit(q)
+    eng.run_to_completion(3000)
+    assert ("overflow", 3) in eng.injector.fired
+    assert eng.quarantines >= 1 and eng.overflow_events >= 1
+    _assert_parity(eng, qs)
+
+
+def test_fused_mid_flight_cancel_spares_cotenants(gk):
+    """Cancelling one tenant mid-tick under the fused datapath clears ONLY
+    its lane (reset to the idle min row); survivors of BOTH families stay
+    bit-identical to solo runs."""
+    plan = QueryFaultPlan(cancel_at=((0, 2),))
+    eng = GraphServingEngine(
+        gk, GraphServeConfig(query_slots=4, capacity_policy=SMALL),
+        fault_plan=plan)
+    qs = _mixed()
+    for q in qs:
+        eng.submit(q)
+    eng.run_to_completion(3000)
+    cancelled = [q for q in qs if q.status == "cancelled"]
+    assert len(cancelled) == 1 and cancelled[0].qid == 0
+    _assert_parity(eng, [q for q in qs if q.status == "done"])
+    assert sum(q.status == "done" for q in qs) == len(qs) - 1
+
+
+def test_fused_engine_accepts_composed_view(gk):
+    """A pre-composed GraphView serves identically to letting the engine
+    tile; a tenant-count mismatch is rejected loudly at construction."""
+    Q = 4
+    view = tile_csr(gk, Q)
+    eng = GraphServingEngine(view, GraphServeConfig(query_slots=Q,
+                                                    capacity_policy=SMALL))
+    qs = _mixed()
+    for q in qs:
+        eng.submit(q)
+    eng.run_to_completion(2000)
+    _assert_parity(eng, qs)
+    with pytest.raises(ValueError, match="n_tenants"):
+        GraphServingEngine(view, GraphServeConfig(query_slots=Q + 1,
+                                                  capacity_policy=SMALL))
+
+
+def test_split_engine_rejects_partitioned_view(gk):
+    from repro.graphs.csr import partition_csr
+
+    pview = partition_csr(tile_csr(gk, 2), 1)
+    with pytest.raises(ValueError, match="fused"):
+        GraphServingEngine(pview, GraphServeConfig(
+            query_slots=2, capacity_policy=SMALL, fused=False))
+
+
 # ---------------------------------------------------------------------------
 # checked-in serving throughput floor
 # ---------------------------------------------------------------------------
@@ -420,3 +570,7 @@ def test_checked_in_bench_keeps_serving_floor():
     bench = json.load(open(path))
     assert bench["serving_queries_per_s"] >= 2.0, bench[
         "serving_queries_per_s"]
+    # family fusion may never LOSE to the split engine: one tagged dispatch
+    # replaces two per-family dispatches per tick
+    assert bench["serving_fused_vs_split"] >= 1.0, bench[
+        "serving_fused_vs_split"]

@@ -53,6 +53,32 @@ def test_random_query_mix_matches_solo_runs(qs, graph_name):
             err_msg=f"{q.kind} from {q.source} diverged in the mix {qs}")
 
 
+@settings(max_examples=8, deadline=None)
+@given(qs=st.lists(query_strategy, min_size=1, max_size=6))
+def test_random_query_mix_through_composed_partitioned_view(qs):
+    """Random kind mixes served through a fully COMPOSED view —
+    ``partition_csr(tile_csr(g, Q), P)`` at P=1 (the degenerate mesh, so no
+    forced host devices needed) — must match each query's solo run exactly:
+    with one shard the tagged boundary exchange and global<->stacked
+    relayout are identities, so even the add family stays bit-identical."""
+    from repro.graphs.csr import partition_csr
+
+    Q = 3
+    pview = partition_csr(tile_csr(GK, Q), 1)
+    eng = GraphServingEngine(pview, GraphServeConfig(query_slots=Q,
+                                                     capacity_policy=SMALL))
+    queries = [GraphQuery(kind, src, iters=iters) for kind, src, iters in qs]
+    for q in queries:
+        eng.submit(q)
+    eng.run_to_completion(5_000)
+    for q in queries:
+        assert q.done, (q.qid, q.status, q.error)
+        np.testing.assert_array_equal(
+            np.asarray(q.result), eng.solo_reference(q),
+            err_msg=f"{q.kind} from {q.source} diverged through the "
+                    f"composed view in the mix {qs}")
+
+
 @settings(max_examples=10, deadline=None)
 @given(sources=st.lists(st.integers(0, GK.n_nodes - 1),
                         min_size=2, max_size=4))
